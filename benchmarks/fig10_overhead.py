@@ -1,0 +1,63 @@
+"""Paper Fig. 10: step time + activation memory, TBA offload vs no-offload,
+on BERT / GPT / T5 at three (hidden, layers) scenarios.
+
+Claims validated: (1) offloading adds ~no step-time overhead (I/O fully
+overlapped / forwarded); (2) activation peak drops 28–47%.
+CPU-scale geometry (hidden 256/384/512) — same families, same mechanism.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import RunResult, run_staged
+from repro.configs.paper_models import SMALL_SCENARIOS, small_bert, \
+    small_gpt, small_t5
+
+FAMILIES = {"bert": small_bert, "gpt": small_gpt, "t5": small_t5}
+
+
+def run(batch: int = 8, seq: int = 128, steps: int = 3) -> List[dict]:
+    rows = []
+    for fam, make in FAMILIES.items():
+        for hidden, layers in SMALL_SCENARIOS:
+            cfg = make(hidden, layers)
+            keep = run_staged(cfg, strategy="keep", batch=batch, seq=seq,
+                              steps=steps)
+            off = run_staged(cfg, strategy="offload", batch=batch,
+                             seq=seq, steps=steps)
+            rows.append({
+                "family": fam, "hidden": hidden, "layers": layers,
+                "keep_step_s": keep.step_time_s,
+                "offload_step_s": off.step_time_s,
+                "overhead_pct": 100 * (off.step_time_s / keep.step_time_s
+                                       - 1),
+                "keep_peak_mb": keep.peak_activation_bytes / 1e6,
+                "offload_peak_mb": off.peak_activation_bytes / 1e6,
+                "peak_reduction_pct": 100 * (
+                    1 - off.peak_activation_bytes
+                    / keep.peak_activation_bytes),
+                "bwd_begin_reduction_pct": 100 * (
+                    1 - off.backward_begin_bytes
+                    / max(keep.backward_begin_bytes, 1)),
+                "offloaded_mb": off.bytes_offloaded / 1e6,
+                "io_wait_pct": 100 * off.fetch_wait_s
+                / max(off.step_time_s, 1e-9),
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"fig10/{r['family']}-h{r['hidden']}-l{r['layers']}"
+        print(f"{name},{r['offload_step_s']*1e6:.0f},"
+              f"overhead={r['overhead_pct']:.1f}%"
+              f";io_wait={r['io_wait_pct']:.1f}%"
+              f";peak_reduction={r['peak_reduction_pct']:.1f}%"
+              f";offloaded_mb={r['offloaded_mb']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

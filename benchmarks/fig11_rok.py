@@ -1,0 +1,44 @@
+"""Paper Fig. 11: the recompute–offload–keep (ROK) curve.
+
+For each batch size, run the three placement strategies and plot
+(activation peak, model throughput). Claims validated: offload matches
+keep's throughput at a lower peak; offload beats recompute on both axes
+at matched batch; with a fixed memory budget offload supports ~2x the
+batch of keep.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import run_staged
+from repro.configs.paper_models import small_bert
+from repro.core.rok import RokPoint, pareto_front
+
+
+def run(batches=(4, 8, 16), seq: int = 128, hidden: int = 384,
+        layers: int = 3, steps: int = 3) -> List[RokPoint]:
+    cfg = small_bert(hidden, layers)
+    points: List[RokPoint] = []
+    for b in batches:
+        for strategy in ("keep", "offload", "recompute"):
+            res = run_staged(cfg, strategy=strategy, batch=b, seq=seq,
+                             steps=steps)
+            points.append(res.rok_point())
+    return points
+
+
+def main():
+    points = run()
+    front = set(id(p) for p in pareto_front(points))
+    print("name,us_per_call,derived")
+    for p in points:
+        name = f"fig11/{p.strategy}-b{p.batch_size}"
+        print(f"{name},{p.step_time_s*1e6:.0f},"
+              f"peak_mb={p.peak_activation_bytes/1e6:.1f}"
+              f";tput_gflops={p.throughput_flops_per_s/1e9:.2f}"
+              f";pareto={'y' if id(p) in front else 'n'}")
+    return points
+
+
+if __name__ == "__main__":
+    main()

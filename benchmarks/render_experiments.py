@@ -1,0 +1,61 @@
+"""Render the EXPERIMENTS.md roofline tables from the dry-run JSONs
+(current results/dryrun vs archived results/dryrun_iter0 baselines)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.roofline import DEFAULT_DIR, load, summarize, table
+
+ITER0 = os.path.join(os.path.dirname(DEFAULT_DIR), "dryrun_iter0")
+
+
+def perf_delta_table(cells):
+    """before/after rows for the hillclimbed cells."""
+    out = ["| cell | iter | t_comp | t_mem(lb) | t_mem(ub) | t_coll "
+           "| useful | dev GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch, shape in cells:
+        for label, suffix in (("paper-faithful base", "single-paperbase"),
+                              ("optimized", "single")):
+            slug = f"{arch.replace('.', '_')}__{shape}__{suffix}.json"
+            path = os.path.join(DEFAULT_DIR, slug)
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            if r.get("status") != "ok":
+                continue
+            rl = r["roofline"]
+            lb = r.get("hlo", {}).get("hbm_bytes_lb", 0) / 819e9
+            out.append(
+                f"| {arch} x {shape} | {label} "
+                f"| {rl['t_compute_s']:.2f} | {lb:.2f} "
+                f"| {rl['t_memory_s']:.2f} "
+                f"| {rl['t_collective_s']:.2f} "
+                f"| {rl['useful_flops_ratio']:.3f} "
+                f"| {r['memory_analysis']['peak_device_bytes']/2**30:.0f}"
+                f" |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load(mesh=None)
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(table([r for r in rows if r.get("mesh") == "single"],
+                markdown=True))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(table([r for r in rows if r.get("mesh") == "multi"],
+                markdown=True))
+    print("\n## Summary\n")
+    print("```")
+    print(json.dumps(summarize(rows), indent=1))
+    print("```")
+    print("\n## Hillclimb deltas\n")
+    print(perf_delta_table([("qwen2.5-3b", "train_4k"),
+                            ("llama4-scout-17b-a16e", "train_4k"),
+                            ("kimi-k2-1t-a32b", "train_4k")]))
+
+
+if __name__ == "__main__":
+    main()

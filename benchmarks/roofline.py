@@ -1,0 +1,119 @@
+"""Roofline aggregation (deliverable g): read the dry-run JSONs and emit
+the per-(arch x shape x mesh) three-term roofline table.
+
+    compute    = HLO dot FLOPs / (chips x 197 TFLOP/s)
+    memory     = HLO HBM bytes / (chips x 819 GB/s)
+    collective = wire bytes / (chips x 50 GB/s/link)
+
+All terms are per-device seconds (the HLO module is the per-partition
+program). `useful` = MODEL_FLOPS / (HLO FLOPs x chips) — how much of the
+compiled compute is algorithmic (remat and attention overhead show up
+here). Markdown output feeds EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+
+
+def load(results_dir: str = DEFAULT_DIR, mesh: Optional[str] = None
+         ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def table(rows: List[Dict], *, markdown: bool = False) -> str:
+    out = []
+    header = ("arch", "shape", "mesh", "status", "t_comp", "t_mem_lb",
+              "t_mem_ub", "t_coll", "dominant", "useful", "dev_GB")
+    if markdown:
+        out.append("| " + " | ".join(header) + " |")
+        out.append("|" + "---|" * len(header))
+    else:
+        out.append(",".join(header))
+    for r in rows:
+        if r.get("status") == "skip":
+            vals = (r["arch"], r["shape"], r.get("mesh", ""), "skip",
+                    "-", "-", "-", "-", "-", "-", "-")
+        elif r.get("status") != "ok":
+            vals = (r["arch"], r["shape"], r.get("mesh", ""), "ERROR",
+                    "-", "-", "-", "-", "-", "-", "-")
+        else:
+            rl = r["roofline"]
+            mem = r["memory_analysis"]
+            lb = r.get("hlo", {}).get("hbm_bytes_lb")
+            vals = (r["arch"], r["shape"], r["mesh"], "ok",
+                    f"{rl['t_compute_s']:.3f}",
+                    f"{lb/819e9:.3f}" if lb is not None else "-",
+                    f"{rl['t_memory_s']:.3f}",
+                    f"{rl['t_collective_s']:.3f}",
+                    rl["dominant"],
+                    f"{rl['useful_flops_ratio']:.3f}"
+                    if rl.get("useful_flops_ratio") else "-",
+                    f"{mem['peak_device_bytes']/2**30:.1f}")
+        if markdown:
+            out.append("| " + " | ".join(str(v) for v in vals) + " |")
+        else:
+            out.append(",".join(str(v) for v in vals))
+    return "\n".join(out)
+
+
+def summarize(rows: List[Dict]) -> Dict:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    dom = {}
+    for r in ok:
+        dom[r["roofline"]["dominant"]] = \
+            dom.get(r["roofline"]["dominant"], 0) + 1
+    worst = sorted(
+        (r for r in ok if r["kind"] == "train"),
+        key=lambda r: (r["roofline"]["useful_flops_ratio"] or 0))
+    return {"n_ok": len(ok),
+            "n_skip": sum(r.get("status") == "skip" for r in rows),
+            "n_err": sum(r.get("status") not in ("ok", "skip")
+                         for r in rows),
+            "dominant_counts": dom,
+            "worst_useful": [(r["arch"], r["shape"],
+                              r["roofline"]["useful_flops_ratio"])
+                             for r in worst[:3]]}
+
+
+def main():
+    rows = load()
+    print("name,us_per_call,derived")
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        lb = r.get("hlo", {}).get("hbm_bytes_lb")
+        t_mem_lb = (lb / 819e9) if lb is not None else rl["t_memory_s"]
+        bound_ub = max(rl["t_compute_s"], rl["t_memory_s"],
+                       rl["t_collective_s"])
+        bound_lb = max(rl["t_compute_s"], t_mem_lb,
+                       rl["t_collective_s"])
+        frac_ub = rl["t_compute_s"] / bound_ub if bound_ub else 0.0
+        frac_lb = rl["t_compute_s"] / bound_lb if bound_lb else 0.0
+        print(f"roofline/{r['arch']}-{r['shape']}-{r['mesh']},"
+              f"{bound_ub*1e6:.0f},"
+              f"dominant={rl['dominant']}"
+              f";frac_fusion_optimal={frac_lb:.3f}"
+              f";frac_conservative={frac_ub:.3f}"
+              f";useful={rl['useful_flops_ratio'] or 0:.3f}")
+    s = summarize(rows)
+    print(f"roofline/summary,0,ok={s['n_ok']};skip={s['n_skip']};"
+          f"err={s['n_err']};dominant={s['dominant_counts']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: build a model from a config, run the TBA offloading
+trainer for a few steps, inspect what the spool did.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.staged import StagedTrainer
+from repro.models.api import build_model
+from repro.models.transformer import RunSettings
+from repro.optim.optimizers import adamw
+
+
+def main():
+    # any of the 10 assigned architectures works here; reduced() shrinks
+    # it to CPU scale while keeping the family (GQA + QKV-bias for qwen).
+    cfg = dataclasses.replace(reduced(get_config("qwen2.5-3b")),
+                              dtype="float32")
+    api = build_model(cfg)
+    settings = RunSettings(attn_impl="xla", attn_chunk=64,
+                           param_dtype="float32")
+    opt = adamw(1e-3)
+
+    trainer = StagedTrainer(api, settings, opt, strategy="offload",
+                            min_offload_elements=2 ** 12)
+    params = api.init(jax.random.key(0))
+    opt_state = opt.init(params)
+
+    rng = np.random.default_rng(0)
+    B, S = 4, 64
+    for step in range(5):
+        toks = rng.integers(0, cfg.vocab_size, (B, S + 1))
+        batch = {"tokens": jax.numpy.asarray(toks[:, :-1]),
+                 "labels": jax.numpy.asarray(toks[:, 1:])}
+        params, opt_state, rep = trainer.train_step(params, opt_state,
+                                                    [batch])
+        print(f"step {step} loss={rep.loss:.4f} "
+              f"step_time={rep.step_time:.2f}s "
+              f"act_peak={rep.peak_activation_bytes/1e6:.1f}MB "
+              f"offloaded={rep.stats.bytes_offloaded/1e6:.1f}MB "
+              f"forwarded={rep.stats.bytes_forwarded/1e6:.1f}MB")
+    if rep.plan:
+        print(f"adaptive plan: offload modules 0..{rep.plan.last_offloaded}"
+              f" of {len(rep.plan.offload)} "
+              f"(required {rep.plan.required_bw/1e6:.0f} MB/s of "
+              f"{rep.plan.write_bw/1e6:.0f} MB/s measured)")
+    trainer.close()
+
+
+if __name__ == "__main__":
+    main()

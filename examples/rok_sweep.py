@@ -1,0 +1,32 @@
+"""Reproduce the paper's Fig. 11 ROK curve on a CPU-scale BERT: sweep
+batch size x {keep, offload, recompute} and print the curve points +
+Pareto front.
+
+    PYTHONPATH=src:. python examples/rok_sweep.py
+"""
+from benchmarks.common import run_staged
+from repro.configs.paper_models import small_bert
+from repro.core.rok import pareto_front
+
+
+def main():
+    cfg = small_bert(384, 3)
+    points = []
+    for batch in (4, 8, 16):
+        for strategy in ("keep", "offload", "recompute"):
+            r = run_staged(cfg, strategy=strategy, batch=batch, seq=128,
+                           steps=3)
+            p = r.rok_point()
+            points.append(p)
+            print(f"B={batch:3d} {strategy:9s} "
+                  f"peak={p.peak_activation_bytes/1e6:7.1f}MB "
+                  f"throughput={p.throughput_flops_per_s/1e9:6.2f} GFLOP/s")
+    print("\nPareto front (memory -> throughput):")
+    for p in pareto_front(points):
+        print(f"  {p.strategy:9s} B={p.batch_size:3d} "
+              f"peak={p.peak_activation_bytes/1e6:7.1f}MB "
+              f"tput={p.throughput_flops_per_s/1e9:6.2f} GFLOP/s")
+
+
+if __name__ == "__main__":
+    main()

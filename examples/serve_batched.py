@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + continuous decode on a reduced
+qwen2.5 (GQA) with a synthetic request queue.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    sys.argv = ["serve", "--arch", "qwen2.5-3b:reduced", "--requests",
+                "16", "--batch", "4", "--prompt-len", "32",
+                "--max-new", "16", "--cache-len", "64"]
+    serve_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""End-to-end training driver example: a ~4M-param GPT on the synthetic
+Markov corpus with the fault-tolerant TrainLoop — async checkpoints,
+resume, metrics, straggler watchdog. Scale up with --arch gpt-124m for
+the ~100M-parameter run (same code path).
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro.launch.train import main as train_main
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="small-gpt")
+    args, _ = ap.parse_known_args()
+    ckpt = tempfile.mkdtemp(prefix="e2e_ckpt_")
+    metrics = os.path.join(ckpt, "metrics.jsonl")
+    sys.argv = ["train", "--arch", args.arch, "--engine", "jit",
+                "--steps", str(args.steps), "--batch", "8",
+                "--seq", "128", "--ckpt", ckpt, "--ckpt-every", "100",
+                "--metrics", metrics]
+    train_main()
+    import json
+    lines = [json.loads(l) for l in open(metrics)]
+    print(f"\nloss: step 1 = {lines[0]['loss']:.3f}  ->  "
+          f"step {lines[-1]['step']} = {lines[-1]['loss']:.3f}")
+    print(f"checkpoints in {ckpt}: "
+          f"{[d for d in sorted(os.listdir(ckpt)) if d.startswith('step')]}")
+
+
+if __name__ == "__main__":
+    main()

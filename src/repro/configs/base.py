@@ -1,0 +1,203 @@
+"""Config schema for all supported architectures.
+
+Every assigned architecture (and the paper's own BERT/GPT/T5 evaluation
+models) is described by a single `ModelConfig`. The config is purely
+declarative; `repro.models.api.build_model` turns it into init/apply
+functions and `repro.parallel.sharding` turns it into PartitionSpec trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# Families. "dense" covers every pure-attention decoder; encoder-only and
+# encoder-decoder are orthogonal flags so hubert ("audio") and T5 reuse the
+# same transformer substrate.
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio", "encdec")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                      # 0 -> d_model // num_heads
+
+    # --- attention ---
+    causal: bool = True                    # False for encoder-only
+    qkv_bias: bool = False
+    sliding_window: int = 0                # 0 -> full attention
+    # layer i is local (sliding window) iff local_global_period > 0 and
+    # i % local_global_period != local_global_period - 1 (gemma2: period 2)
+    local_global_period: int = 0
+    attn_logit_softcap: float = 0.0        # 0 -> disabled
+    final_logit_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+
+    # --- MoE ---
+    moe_num_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared_experts: int = 0            # shared (always-on) experts
+    moe_first_dense_layers: int = 0        # leading dense layers (kimi-style)
+    moe_dense_ff: int = 0                  # d_ff of the dense layers
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state_dim: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv_width: int = 4
+
+    # --- hybrid (recurrentgemma) ---
+    # pattern of block kinds repeated over depth, e.g. ("rglru","rglru","attn")
+    hybrid_pattern: Tuple[str, ...] = ()
+    rglru_width: int = 0                   # 0 -> d_model
+    rglru_conv_width: int = 4
+
+    # --- cross attention (vlm / encdec decoder) ---
+    cross_attn_period: int = 0             # every k-th layer is cross-attn
+    encoder_seq_len: int = 0               # stub frontend sequence length
+
+    # --- encoder-decoder (T5; paper benchmark family) ---
+    num_decoder_layers: int = 0
+
+    # --- input modality ---
+    # "tokens": int32 ids; "embeddings": precomputed frames/patches (stub)
+    input_kind: str = "tokens"
+
+    # --- misc ---
+    act: str = "silu"                      # silu | gelu
+    mlp_glu: bool = True                   # gated MLP (False: classic 2-layer)
+    max_position: int = 32768              # learned-pos table (non-RoPE archs)
+    scale_embed: bool = False              # gemma-style sqrt(d_model) scaling
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # Extra normalisation flavour: gemma2 uses pre+post norms per block.
+    post_block_norm: bool = False
+
+    # ---- derived ----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up so the 16-way model axis always divides it."""
+        return int(math.ceil(self.vocab_size / 256) * 256)
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def has_decode(self) -> bool:
+        """Encoder-only models have no autoregressive decode step."""
+        return self.causal
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if every block is sub-quadratic (SSM / linear recurrence /
+        bounded-window attention). Pure full-attention archs skip long_500k."""
+        if self.family == "ssm":
+            return True
+        if self.hybrid_pattern:
+            # hybrid: attention blocks must be sliding-window
+            return self.sliding_window > 0
+        return False
+
+    def layer_kind(self, i: int) -> str:
+        """Block kind at depth i: 'attn' | 'rglru' | 'ssm' | 'cross'."""
+        if self.family == "ssm":
+            return "ssm"
+        if self.hybrid_pattern:
+            return self.hybrid_pattern[i % len(self.hybrid_pattern)]
+        if self.cross_attn_period and (i % self.cross_attn_period
+                                       == self.cross_attn_period - 1):
+            return "cross"
+        return "attn"
+
+    def is_local_layer(self, i: int) -> bool:
+        if self.sliding_window <= 0:
+            return False
+        if self.local_global_period <= 0:
+            return True  # all layers local (recurrentgemma attn blocks)
+        return i % self.local_global_period != self.local_global_period - 1
+
+    def is_moe_layer(self, i: int) -> bool:
+        return (self.moe_num_experts > 0) and (i >= self.moe_first_dense_layers)
+
+    def validate(self) -> "ModelConfig":
+        assert self.family in FAMILIES, self.family
+        if self.family != "ssm":
+            assert self.num_heads >= 1
+            if self.num_kv_heads:
+                assert self.num_heads % self.num_kv_heads == 0
+        if self.moe_num_experts:
+            assert 0 < self.moe_top_k <= self.moe_num_experts
+        if self.hybrid_pattern:
+            assert all(k in ("rglru", "attn") for k in self.hybrid_pattern)
+        return self
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One (input-shape) cell: training or serving geometry."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+# The four assigned shapes (identical across the 10 LM-family archs).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,
+            heads: int = 4, kv_heads: int = 0, d_ff: int = 128,
+            vocab: int = 512, experts: int = 4) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    kv = kv_heads or max(1, min(cfg.num_kv_heads, heads) if cfg.num_kv_heads else heads)
+    while heads % kv:
+        kv -= 1
+    updates = dict(
+        num_layers=layers, d_model=d_model, num_heads=heads,
+        num_kv_heads=kv, d_ff=d_ff, vocab_size=vocab,
+        head_dim=d_model // heads,
+    )
+    if cfg.moe_num_experts:
+        updates.update(moe_num_experts=experts,
+                       moe_top_k=min(cfg.moe_top_k, experts),
+                       moe_shared_experts=min(cfg.moe_shared_experts, 1),
+                       moe_first_dense_layers=min(cfg.moe_first_dense_layers, 1),
+                       moe_dense_ff=d_ff)
+    if cfg.family == "ssm":
+        updates.update(ssm_state_dim=16, ssm_head_dim=16, ssm_chunk=32)
+    if cfg.rglru_width:
+        updates.update(rglru_width=d_model)
+    if cfg.sliding_window:
+        updates.update(sliding_window=min(cfg.sliding_window, 16))
+    if cfg.encoder_seq_len:
+        updates.update(encoder_seq_len=16)
+    if cfg.num_decoder_layers:
+        updates.update(num_decoder_layers=max(1, layers // 2))
+    if cfg.cross_attn_period:
+        updates.update(cross_attn_period=2)
+    return dataclasses.replace(cfg, **updates).validate()

@@ -1,0 +1,80 @@
+"""Adaptive offloading planner (paper §3.3.3, Figure 8).
+
+Profile the first training step to collect, per module (here: per scanned
+super-layer), the residual bytes and forward compute time, plus the measured
+spool write bandwidth. Then pick the *last module to offload* m as the
+largest m such that the aggregate transfer deadline holds:
+
+    bytes(m)   = sum_{j<m} store_j + (store_m + load_m)
+    deadline(m)= t_fwd_total - t_fwd_end(m)            (rest of forward)
+                 + bwd_factor * sum_{j>m} t_fwd_j      (bwd of later modules)
+    required_bw(m) = bytes(m) / deadline(m)  <=  write_bandwidth
+
+with the paper's estimate bwd_factor = 2 (backward ~ 2x forward). Modules
+after m are kept in GPU memory — they are the first ones needed when the
+backward pass begins, so offloading them cannot reduce the peak (offloading
+tensors after the peak is not helpful) and only delays memory reclaim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+BWD_FACTOR = 2.0
+
+
+@dataclass(frozen=True)
+class ModuleProfile:
+    name: str
+    bytes: int          # residual bytes this module would offload
+    fwd_time: float     # seconds of forward compute
+
+
+@dataclass(frozen=True)
+class OffloadPlan:
+    offload: List[bool]          # per module
+    required_bw: float           # bytes/s needed for the chosen plan
+    write_bw: float              # measured bytes/s
+    last_offloaded: int          # index m (-1: nothing offloaded)
+
+    @property
+    def num_offloaded(self) -> int:
+        return sum(self.offload)
+
+
+def required_bandwidth(profiles: Sequence[ModuleProfile], m: int,
+                       bwd_factor: float = BWD_FACTOR) -> float:
+    """Bandwidth needed if modules 0..m (inclusive) are offloaded."""
+    if m < 0:
+        return 0.0
+    bytes_needed = sum(p.bytes for p in profiles[:m]) + 2 * profiles[m].bytes
+    t_fwd_rest = sum(p.fwd_time for p in profiles[m + 1:])
+    t_bwd_later = bwd_factor * sum(p.fwd_time for p in profiles[m + 1:])
+    # transfers for modules 0..m can also use the time while they execute:
+    t_fwd_own = sum(p.fwd_time for p in profiles[1:m + 1])
+    deadline = t_fwd_own + t_fwd_rest + t_bwd_later
+    if deadline <= 0:
+        return float("inf")
+    return bytes_needed / deadline
+
+
+def plan_offload(profiles: Sequence[ModuleProfile], write_bw: float,
+                 bwd_factor: float = BWD_FACTOR,
+                 always_keep_last: bool = True) -> OffloadPlan:
+    """Choose the largest feasible last-offloaded module (paper's rule)."""
+    n = len(profiles)
+    hi = n - 2 if always_keep_last else n - 1  # last module kept (§3.2 ④)
+    best = -1
+    for m in range(hi, -2, -1):
+        if m < 0:
+            break
+        if required_bandwidth(profiles, m, bwd_factor) <= write_bw:
+            best = m
+            break
+    offload = [i <= best for i in range(n)]
+    return OffloadPlan(
+        offload=offload,
+        required_bw=required_bandwidth(profiles, best, bwd_factor),
+        write_bw=write_bw,
+        last_offloaded=best,
+    )

@@ -1,0 +1,100 @@
+"""Stable tensor identifiers and the deduplication registry (paper §3.3.1).
+
+The paper tags each tensor's underlying storage with a first-seen timestamp
+because PyTorch's id() is address-based and addresses get recycled after
+garbage collection. The JAX analogue: a jax.Array's device buffer pointer is
+stable while the buffer is alive but recyclable after it dies, so TensorIds
+combines (buffer pointer, shape, dtype) with a monotonically increasing
+first-seen sequence number kept in a registry keyed by live buffers.
+
+Parameters are registered up front and excluded from offloading (the
+transpose-consistency concern of §3.3.1 does not arise in JAX — a jitted
+step re-derives views each call — but shared buffers, e.g. the vision
+encoder's K/V reused by every cross-attention layer, hit the dedup path).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Set, Tuple
+
+import numpy as np
+
+
+def _buffer_key(arr) -> Tuple[int, Tuple[int, ...], str]:
+    """Identity key of an array's storage (pointer, shape, dtype)."""
+    if hasattr(arr, "unsafe_buffer_pointer"):
+        try:
+            ptr = arr.unsafe_buffer_pointer()
+        except Exception:
+            ptr = id(arr)
+    else:
+        a = np.asarray(arr)
+        ptr = a.__array_interface__["data"][0]
+    return (ptr, tuple(arr.shape), str(arr.dtype))
+
+
+@dataclass
+class TensorRecord:
+    tid: int
+    nbytes: int
+    refcount: int = 1
+
+
+class TensorIdRegistry:
+    """Assigns stable ids; detects duplicates among *live* arrays.
+
+    `acquire(arr)` returns (tid, is_duplicate). The registry holds no
+    reference to the array; the caller must `release(tid)` when its use of
+    the tensor ends so the key can be recycled safely.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._next = 0
+        self._by_key: Dict[Tuple, TensorRecord] = {}
+        self._params: Set[Tuple] = set()
+
+    def register_parameters(self, tree) -> int:
+        """Exclude every leaf of a params pytree from offloading."""
+        import jax
+        n = 0
+        with self._lock:
+            for leaf in jax.tree.leaves(tree):
+                self._params.add(_buffer_key(leaf))
+                n += 1
+        return n
+
+    def is_parameter(self, arr) -> bool:
+        with self._lock:
+            return _buffer_key(arr) in self._params
+
+    def acquire(self, arr) -> Tuple[int, bool]:
+        key = _buffer_key(arr)
+        with self._lock:
+            rec = self._by_key.get(key)
+            if rec is not None:
+                rec.refcount += 1
+                return rec.tid, True
+            tid = self._next
+            self._next += 1
+            self._by_key[key] = TensorRecord(tid, int(np.prod(arr.shape))
+                                             * arr.dtype.itemsize)
+            return tid, False
+
+    def release(self, arr) -> None:
+        self.release_key(_buffer_key(arr))
+
+    def release_key(self, key: Tuple) -> None:
+        with self._lock:
+            rec = self._by_key.get(key)
+            if rec is None:
+                return
+            rec.refcount -= 1
+            if rec.refcount <= 0:
+                del self._by_key[key]
+
+    @property
+    def live_count(self) -> int:
+        with self._lock:
+            return len(self._by_key)

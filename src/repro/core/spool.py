@@ -1,0 +1,351 @@
+"""ActivationSpool — the tensor cache's I/O engine (paper §3.2–3.3.2).
+
+Two FIFO thread pools (store / load), exactly the paper's structure:
+
+  * offload(key, arrays): enqueue an async store; the spool holds the only
+    strong reference to the arrays, so device memory is reclaimed the moment
+    the write completes and the reference is dropped (pack-hook semantics).
+  * prefetch(key): enqueue an async load (issued by the backward walker one
+    module ahead, §3.3.2).
+  * fetch(key): blocking acquire for backward. If the store is still queued
+    or in flight, the in-memory reference is *forwarded* (§3.3.2) and the
+    pending store is cancelled (adaptive-offloading feature 1, §3.3.3).
+  * deduplication: arrays whose storage is already tracked (or registered as
+    parameters) are recorded as aliases and not written twice (§3.3.1).
+
+The "SSD" here is a real directory written through a real filesystem; an
+optional bandwidth_limit simulates a slower tier for the ROK sweeps.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.accounting import MemoryTracker
+from repro.core.ids import TensorIdRegistry, _buffer_key
+
+# job states
+QUEUED, RUNNING, DONE, CANCELED = range(4)
+
+# paper Algorithm 2 line 12: tensors smaller than 2**20 elements stay put
+MIN_OFFLOAD_ELEMENTS = 2 ** 20
+
+
+def _nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _serialize(leaves: Sequence[np.ndarray]) -> bytes:
+    metas, blobs = [], []
+    for a in leaves:
+        a = np.asarray(a)
+        metas.append((a.shape, str(a.dtype)))
+        blobs.append(a.tobytes())
+    return pickle.dumps((metas, blobs), protocol=4)
+
+
+def _deserialize(data: bytes):
+    import ml_dtypes
+    metas, blobs = pickle.loads(data)
+    out = []
+    for (shape, dt), blob in zip(metas, blobs):
+        np_dt = np.dtype(getattr(ml_dtypes, dt, dt) if isinstance(dt, str)
+                         else dt)
+        out.append(np.frombuffer(blob, dtype=np_dt).reshape(shape))
+    return out
+
+
+@dataclass
+class SpoolStats:
+    bytes_offloaded: int = 0
+    bytes_loaded: int = 0
+    bytes_forwarded: int = 0
+    bytes_deduped: int = 0
+    stores_canceled: int = 0
+    store_time: float = 0.0
+    load_time: float = 0.0
+    num_stores: int = 0
+    num_loads: int = 0
+    # time the *consumer* (backward pass) spent blocked waiting for a
+    # load — the paper's "I/O latency exposed in the critical path".
+    fetch_wait_time: float = 0.0
+
+    @property
+    def write_bandwidth(self) -> float:
+        return self.bytes_offloaded / self.store_time \
+            if self.store_time else float("inf")
+
+
+class _Job:
+    __slots__ = ("key", "arrays", "state", "cond", "path", "kind")
+
+    def __init__(self, key, arrays, path, kind):
+        self.key = key
+        self.arrays = arrays
+        self.state = QUEUED
+        self.cond = threading.Condition()
+        self.path = path
+        self.kind = kind  # "store" | "load"
+
+
+class ActivationSpool:
+    def __init__(self, directory: str, *, store_threads: int = 4,
+                 load_threads: int = 4,
+                 bandwidth_limit: Optional[float] = None,
+                 tracker: Optional[MemoryTracker] = None,
+                 registry: Optional[TensorIdRegistry] = None,
+                 min_offload_elements: int = MIN_OFFLOAD_ELEMENTS):
+        self.dir = directory
+        self.min_offload_elements = min_offload_elements
+        os.makedirs(directory, exist_ok=True)
+        self.tracker = tracker or MemoryTracker()
+        self.registry = registry or TensorIdRegistry()
+        self.stats = SpoolStats()
+        self._bw = bandwidth_limit
+        self._lock = threading.Lock()
+        self._records: Dict[Any, Dict] = {}     # key -> record
+        self._store_q: "queue.Queue[_Job]" = queue.Queue()
+        self._load_q: "queue.Queue[_Job]" = queue.Queue()
+        self._stop = False
+        self._threads: List[threading.Thread] = []
+        for i in range(store_threads):
+            t = threading.Thread(target=self._worker,
+                                 args=(self._store_q,), daemon=True,
+                                 name=f"spool-store-{i}")
+            t.start()
+            self._threads.append(t)
+        for i in range(load_threads):
+            t = threading.Thread(target=self._worker,
+                                 args=(self._load_q,), daemon=True,
+                                 name=f"spool-load-{i}")
+            t.start()
+            self._threads.append(t)
+
+    # ------------------------------------------------------------- API
+
+    def register_parameters(self, params) -> int:
+        return self.registry.register_parameters(params)
+
+    def offload(self, key, tree) -> None:
+        """Async-store a pytree of arrays under `key`. Small tensors and
+        parameter/duplicate storages stay in memory (recorded, not
+        written)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        keep_idx, spool_idx, acquired = [], [], []
+        kept_act_bytes = alias_bytes = 0
+        for i, leaf in enumerate(leaves):
+            if self.registry.is_parameter(leaf):
+                keep_idx.append(i)
+                continue
+            if leaf.size < self.min_offload_elements:
+                keep_idx.append(i)
+                kept_act_bytes += leaf.size * leaf.dtype.itemsize
+                continue
+            tid, dup = self.registry.acquire(leaf)
+            acquired.append(_buffer_key(leaf))
+            if dup:
+                keep_idx.append(i)
+                alias_bytes += leaf.size * leaf.dtype.itemsize
+            else:
+                spool_idx.append(i)
+        self.stats.bytes_deduped += alias_bytes
+
+        spooled = [leaves[i] for i in spool_idx]
+        nbytes = _nbytes(spooled)
+        if kept_act_bytes:
+            self.tracker.alloc((key, "k"), kept_act_bytes,
+                               tag=f"kept_small:{key}")
+        if not spool_idx:               # nothing above the threshold
+            with self._lock:
+                self._records[key] = {
+                    "treedef": treedef,
+                    "keep": {i: leaves[i] for i in keep_idx},
+                    "spool_idx": [], "n_leaves": len(leaves), "job": None,
+                    "nbytes": 0, "loaded": None, "load_job": None,
+                    "acquired": acquired,
+                }
+            return
+        self.tracker.alloc((key, "s"), nbytes, tag=f"residual:{key}")
+        path = os.path.join(self.dir, f"{key}.act")
+        job = _Job(key, spooled, path, "store")
+        with self._lock:
+            self._records[key] = {
+                "treedef": treedef, "keep": {i: leaves[i] for i in keep_idx},
+                "spool_idx": spool_idx, "n_leaves": len(leaves),
+                "job": job, "nbytes": nbytes, "loaded": None,
+                "load_job": None, "acquired": acquired,
+            }
+        self._store_q.put(job)
+
+    def keep(self, key, tree) -> None:
+        """Record a kept-in-memory pytree (adaptive offloading keeps the
+        last modules on device, §3.3.3)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        nbytes = sum(x.size * x.dtype.itemsize for x in leaves
+                     if not self.registry.is_parameter(x))
+        self.tracker.alloc((key, "k"), nbytes, tag=f"kept:{key}")
+        with self._lock:
+            self._records[key] = {
+                "treedef": treedef, "keep": dict(enumerate(leaves)),
+                "spool_idx": [], "n_leaves": len(leaves), "job": None,
+                "nbytes": nbytes, "loaded": None, "load_job": None,
+                "acquired": [],
+            }
+
+    def prefetch(self, key) -> None:
+        with self._lock:
+            rec = self._records.get(key)
+            if rec is None or not rec["spool_idx"]:
+                return
+            job = rec["job"]
+            with job.cond:
+                if job.state in (QUEUED, RUNNING):
+                    return          # still in memory; forwarding will hit
+            if rec["load_job"] is not None or rec["loaded"] is not None:
+                return
+            lj = _Job(key, None, job.path, "load")
+            rec["load_job"] = lj
+        self._load_q.put(lj)
+
+    def fetch(self, key):
+        """Blocking: return the full pytree for backward."""
+        with self._lock:
+            rec = self._records.get(key)
+            if rec is None:
+                raise KeyError(key)
+            job = rec["job"]
+        spooled = None
+        if job is not None and rec["spool_idx"]:
+            with job.cond:
+                if job.state in (QUEUED, RUNNING):
+                    # ---- tensor forwarding (§3.3.2): the store has not
+                    # finished; upgrade the in-flight reference. Cancel the
+                    # write if it has not started (§3.3.3 feature 1).
+                    spooled = job.arrays
+                    self.stats.bytes_forwarded += _nbytes(spooled)
+                    if job.state == QUEUED:
+                        job.state = CANCELED
+                        self.stats.stores_canceled += 1
+                        # memory stays resident; keep tracker entry
+            if spooled is None:
+                with self._lock:
+                    lj = rec["load_job"]
+                if lj is None:
+                    self.prefetch(key)
+                    with self._lock:
+                        lj = rec["load_job"]
+                if lj is not None:
+                    t_wait = time.perf_counter()
+                    with lj.cond:
+                        while lj.state not in (DONE, CANCELED):
+                            lj.cond.wait()
+                    self.stats.fetch_wait_time += (time.perf_counter()
+                                                   - t_wait)
+                with self._lock:
+                    spooled = rec["loaded"]
+                self.tracker.alloc((key, "s"), rec["nbytes"],
+                                   tag=f"reloaded:{key}")
+        leaves = [None] * rec["n_leaves"]
+        for i, leaf in rec["keep"].items():
+            leaves[i] = leaf
+        if rec["spool_idx"]:
+            for i, leaf in zip(rec["spool_idx"], spooled):
+                leaves[i] = jax.numpy.asarray(leaf) \
+                    if isinstance(leaf, np.ndarray) else leaf
+        return jax.tree.unflatten(rec["treedef"], leaves)
+
+    def drop(self, key) -> None:
+        """Consume a record after backward: free memory + delete the file."""
+        with self._lock:
+            rec = self._records.pop(key, None)
+        if rec is None:
+            return
+        for bkey in rec["acquired"]:
+            self.registry.release_key(bkey)
+        self.tracker.free((key, "s"), tag=f"consumed:{key}")
+        self.tracker.free((key, "k"), tag=f"consumed:{key}")
+        try:
+            os.unlink(os.path.join(self.dir, f"{key}.act"))
+        except OSError:
+            pass
+
+    def wait_io(self) -> None:
+        """Barrier: wait for all queued stores (paper Algorithm 1 line 15)."""
+        self._store_q.join()
+        self._load_q.join()
+
+    def close(self) -> None:
+        self.wait_io()
+        self._stop = True
+        for _ in self._threads:
+            self._store_q.put(None)
+            self._load_q.put(None)
+
+    # --------------------------------------------------------- workers
+
+    def _worker(self, q: "queue.Queue[Optional[_Job]]"):
+        while True:
+            job = q.get()
+            if job is None:
+                q.task_done()
+                return
+            try:
+                self._run_job(job)
+            finally:
+                q.task_done()
+
+    def _run_job(self, job: _Job):
+        with job.cond:
+            if job.state == CANCELED:
+                job.cond.notify_all()
+                return
+            job.state = RUNNING
+        t0 = time.perf_counter()
+        if job.kind == "store":
+            arrays = [np.asarray(a) for a in job.arrays]
+            data = _serialize(arrays)
+            with open(job.path, "wb") as f:
+                f.write(data)
+            dt = time.perf_counter() - t0
+            if self._bw:
+                min_t = len(data) / self._bw
+                if dt < min_t:
+                    time.sleep(min_t - dt)
+                    dt = min_t
+            self.stats.bytes_offloaded += len(data)
+            self.stats.store_time += dt
+            self.stats.num_stores += 1
+            with job.cond:
+                job.arrays = None          # drop the reference -> memory free
+                job.state = DONE
+                job.cond.notify_all()
+            self.tracker.free((job.key, "s"), tag=f"offloaded:{job.key}")
+        else:
+            with open(job.path, "rb") as f:
+                data = f.read()
+            arrays = _deserialize(data)
+            dt = time.perf_counter() - t0
+            if self._bw:
+                min_t = len(data) / self._bw
+                if dt < min_t:
+                    time.sleep(min_t - dt)
+                    dt = min_t
+            self.stats.bytes_loaded += len(data)
+            self.stats.load_time += dt
+            self.stats.num_loads += 1
+            with self._lock:
+                rec = self._records.get(job.key)
+                if rec is not None:
+                    rec["loaded"] = arrays
+            with job.cond:
+                job.state = DONE
+                job.cond.notify_all()

@@ -1,0 +1,445 @@
+"""Host-staged trainer: the runnable TBA path (paper §3.1–§3.3).
+
+Executes a training step as a chain of jitted per-module stages
+(encoder stages -> embed -> super-layer x L -> loss head). After each
+module's forward, its *actual autograd residuals* — the tensors jax.vjp
+saves for backward, extracted by flattening the vjp closure — are handed
+to the ActivationSpool, which stores them asynchronously; backward walks
+the chain in reverse, prefetching one module ahead. This is the
+pack/unpack-hook dataflow of the paper realised JAX-natively:
+
+  pack hook      -> vjp-residual extraction + spool.offload()
+  unpack hook    -> spool.fetch() (blocking, with tensor forwarding)
+  param exclusion-> trace-time tracer-identity detection of parameter
+                    leaves (paper §3.3.1)
+  scope stack    -> the explicit stage list
+  backward prefetch (§3.3.2) -> spool.prefetch(prev stage)
+  adaptive offloading (§3.3.3) -> profile step 0, plan_offload(), keep-set
+
+Encoder-decoder (T5) and VLM archs thread a second value — the encoder
+states `enc` — through the chain: every cross-attention stage consumes
+it, and its cotangents accumulate across stages before flowing back into
+the encoder stages (`enc` is referenced by many scopes but offloaded
+once — the paper's §3.3.1 dedup scenario).
+
+Strategies (the ROK axes of §4.3):
+  "keep"      — residuals stay in memory (tracked for the footprint curve)
+  "offload"   — TBA: async spool to disk
+  "recompute" — layerwise full recomputation: only the module input is
+                kept; backward re-runs the module forward
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accounting import MemoryTracker
+from repro.core.adaptive import ModuleProfile, OffloadPlan, plan_offload
+from repro.core.spool import ActivationSpool
+from repro.models.api import ModelApi
+from repro.models.layers import rms_norm
+from repro.models.transformer import RunSettings, apply_block
+
+
+def _nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+class _Stage:
+    """One module of the chain, with faithful fwd/bwd splitting.
+
+    role: enc_embed | enc_layer | enc_final | vlm_enc | embed | layer
+          | head.  takes_enc: stage fn is f(p, x, enc)."""
+
+    def __init__(self, name: str, fn: Callable, role: str,
+                 takes_enc: bool = False):
+        self.name = name
+        self.fn = fn
+        self.role = role
+        self.takes_enc = takes_enc
+        self.cell: Dict[str, Any] = {}
+
+        def fwd(p, *args):
+            out, vjp = jax.vjp(fn, p, *args)
+            leaves, treedef = jax.tree.flatten(vjp)
+            pids = {id(t) for t in jax.tree.leaves(p)}
+            self.cell["treedef"] = treedef
+            self.cell["param_idx"] = tuple(
+                i for i, l in enumerate(leaves) if id(l) in pids)
+            self.cell["n_leaves"] = len(leaves)
+            return out, tuple(leaves)
+
+        def bwd(leaves, g):
+            vjp = jax.tree.unflatten(self.cell["treedef"], list(leaves))
+            return vjp(g)
+
+        def bwd_recompute(p, args, g):
+            _, vjp = jax.vjp(fn, p, *args)
+            return vjp(g)
+
+        self.fwd = jax.jit(fwd)
+        self.bwd = jax.jit(bwd)
+        self.bwd_recompute = jax.jit(bwd_recompute)
+
+    def split_leaves(self, leaves):
+        """(param_leaves_by_idx, residual_leaves_by_idx)"""
+        pidx = set(self.cell["param_idx"])
+        params = {i: l for i, l in enumerate(leaves) if i in pidx}
+        resid = {i: l for i, l in enumerate(leaves) if i not in pidx}
+        return params, resid
+
+
+@dataclass
+class StepReport:
+    loss: float
+    step_time: float
+    peak_activation_bytes: int
+    backward_begin_bytes: int
+    stats: Any = None
+    plan: Optional[OffloadPlan] = None
+
+
+class StagedTrainer:
+    def __init__(self, api: ModelApi, settings: RunSettings, optimizer,
+                 *, strategy: str = "offload",
+                 spool_dir: Optional[str] = None,
+                 store_threads: int = 4, load_threads: int = 4,
+                 bandwidth_limit: Optional[float] = None,
+                 adaptive: bool = True,
+                 num_microbatches: int = 1,
+                 min_offload_elements: Optional[int] = None):
+        assert strategy in ("keep", "offload", "recompute")
+        self.api = api
+        self.cfg = api.cfg
+        self.settings = settings
+        self.optimizer = optimizer
+        self.strategy = strategy
+        self.adaptive = adaptive and strategy == "offload"
+        self.num_microbatches = num_microbatches
+        self.tracker = MemoryTracker()
+        from repro.core.spool import MIN_OFFLOAD_ELEMENTS
+        self.spool = ActivationSpool(
+            spool_dir or tempfile.mkdtemp(prefix="tba_spool_"),
+            store_threads=store_threads, load_threads=load_threads,
+            bandwidth_limit=bandwidth_limit, tracker=self.tracker,
+            min_offload_elements=(MIN_OFFLOAD_ELEMENTS
+                                  if min_offload_elements is None
+                                  else min_offload_elements))
+        self.plan: Optional[OffloadPlan] = None
+        self._profiles: Optional[List[ModuleProfile]] = None
+        self._stages = self._build_stages()
+        self._step = 0
+
+    # ------------------------------------------------------ stage chain
+
+    def _build_stages(self) -> List[_Stage]:
+        api, cfg, settings = self.api, self.cfg, self.settings
+        stages: List[_Stage] = []
+
+        from repro.models.api import _embed_in, _head  # internal reuse
+        import dataclasses as _dc
+
+        # ---- encoder stream (T5) / stub frontend (VLM)
+        if cfg.family == "encdec":
+            enc_cfg = _dc.replace(cfg, causal=False)
+
+            def enc_embed_fn(p, batch):
+                return _embed_in(p, {"tokens": batch["enc_tokens"]},
+                                 enc_cfg, settings)
+
+            stages.append(_Stage("enc_embed", enc_embed_fn, "enc_embed"))
+            for si, seg in enumerate(api.enc_segments):
+                def enc_layer_fn(p_layer, x, seg=seg):
+                    aux: Dict[str, Any] = {}
+                    positions = (jnp.arange(x.shape[1])
+                                 if enc_cfg.use_rope else None)
+                    for i, bdef in enumerate(seg.blocks):
+                        x, _ = apply_block(bdef, p_layer[f"b{i}"], x,
+                                           enc_cfg, settings,
+                                           positions=positions, aux=aux)
+                    return x
+                for rep in range(seg.n_repeat):
+                    stages.append(_Stage(f"enc{si}_l{rep}", enc_layer_fn,
+                                         "enc_layer"))
+
+            def enc_final_fn(p, x):
+                return rms_norm(x, p["enc_norm"]["scale"], cfg.norm_eps)
+
+            stages.append(_Stage("enc_final", enc_final_fn, "enc_final"))
+        elif cfg.family == "vlm":
+            def vlm_enc_fn(p, batch):
+                from repro.models.layers import dtype_of
+                return batch["enc_embeddings"].astype(
+                    dtype_of(settings.param_dtype))
+
+            stages.append(_Stage("vlm_enc", vlm_enc_fn, "vlm_enc"))
+
+        # ---- decoder stream
+        stages.append(_Stage("embed",
+                             lambda p, b: _embed_in(p, b, cfg, settings),
+                             "embed"))
+
+        has_enc = cfg.family in ("encdec", "vlm")
+        for si, seg in enumerate(api.segments):
+            takes_enc = has_enc and any(b.mixer == "cross"
+                                        for b in seg.blocks)
+
+            def layer_fn(p_layer, x, *rest, seg=seg):
+                enc = rest[0] if rest else None
+                aux: Dict[str, Any] = {}
+                positions = (jnp.arange(x.shape[1]) if cfg.use_rope
+                             else None)
+                for i, bdef in enumerate(seg.blocks):
+                    x, _ = apply_block(bdef, p_layer[f"b{i}"], x, cfg,
+                                       settings, positions=positions,
+                                       enc_kv=enc, aux=aux)
+                return x
+            for rep in range(seg.n_repeat):
+                stages.append(_Stage(f"seg{si}_l{rep}", layer_fn,
+                                     "layer", takes_enc=takes_enc))
+
+        def head_fn(p, x, labels):
+            logits = _head(p, x, cfg)
+            mask = (labels >= 0).astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(
+                logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+            return ((lse - picked) * mask).sum() / jnp.maximum(mask.sum(),
+                                                               1.0)
+        stages.append(_Stage("head", head_fn, "head"))
+        return stages
+
+    def _stage_params(self, params) -> List[Any]:
+        """Slice the model params into per-stage param trees (same order
+        as self._stages)."""
+        emb = {k: params[k] for k in ("embed", "pos_embed",
+                                      "frontend_proj") if k in params}
+        out: List[Any] = []
+        for stage in self._stages:
+            if stage.role in ("enc_embed", "embed"):
+                out.append(emb)
+            elif stage.role == "enc_final":
+                out.append({"enc_norm": params["enc_norm"]})
+            elif stage.role == "vlm_enc":
+                out.append({})
+            elif stage.role == "head":
+                out.append({"final_norm": params["final_norm"],
+                            "unembed": params["unembed"]})
+            elif stage.role == "enc_layer":
+                si, rep = self._seg_pos(stage.name)
+                out.append(jax.tree.map(lambda a: a[rep],
+                                        params["enc_segments"][si]))
+            else:  # layer
+                si, rep = self._seg_pos(stage.name)
+                out.append(jax.tree.map(lambda a: a[rep],
+                                        params["segments"][si]))
+        return out
+
+    @staticmethod
+    def _seg_pos(name: str) -> Tuple[int, int]:
+        """'seg0_l3' / 'enc1_l2' -> (segment index, repeat index)."""
+        left, rep = name.split("_l")
+        si = int("".join(ch for ch in left if ch.isdigit()) or 0)
+        return si, int(rep)
+
+    # ------------------------------------------------------------ step
+
+    def _should_offload(self, stage_idx: int) -> bool:
+        if self.strategy != "offload":
+            return False
+        if self.plan is None:
+            return True  # profiling step offloads everything it can
+        return self.plan.offload[stage_idx]
+
+    def _args_for(self, stage: _Stage, batch, x, xe, enc):
+        if stage.role in ("enc_embed", "vlm_enc", "embed"):
+            return (batch,)
+        if stage.role in ("enc_layer", "enc_final"):
+            return (xe,)
+        if stage.role == "head":
+            return (x, batch["labels"])
+        if stage.takes_enc:
+            return (x, enc)
+        return (x,)
+
+    def train_step(self, params, opt_state, batches: Sequence[Dict]) \
+            -> Tuple[Any, Any, StepReport]:
+        """One optimizer step over `batches` micro-batches."""
+        t0 = time.perf_counter()
+        self.tracker.reset_peak()
+        stage_params = self._stage_params(params)
+        n_stages = len(self._stages)
+        grads = None
+        loss_total = 0.0
+        profiles = [ModuleProfile(s.name, 0, 0.0) for s in self._stages]
+        bwd_begin_bytes = 0
+
+        for mb, batch in enumerate(batches):
+            # ---------------- forward ----------------
+            x = xe = enc = None
+            kept: Dict[int, Any] = {}
+            recompute_in: Dict[int, Any] = {}
+            loss = None
+            for si, stage in enumerate(self._stages):
+                args = self._args_for(stage, batch, x, xe, enc)
+                tin = time.perf_counter()
+                recomputable = (self.strategy == "recompute"
+                                and stage.role in ("layer", "enc_layer"))
+                if recomputable:
+                    out = stage.fn(stage_params[si], *args)
+                    key = f"mb{mb}_s{si}"
+                    recompute_in[si] = args
+                    self.tracker.alloc((key, "k"), _nbytes(args),
+                                       tag=f"ckpt:{key}")
+                    leaves = None
+                else:
+                    out, leaves = stage.fwd(stage_params[si], *args)
+                if stage.role == "head":
+                    loss = out
+                elif stage.role in ("enc_embed", "enc_layer"):
+                    xe = out
+                    jax.block_until_ready(xe)
+                elif stage.role in ("enc_final", "vlm_enc"):
+                    enc = out
+                    jax.block_until_ready(enc)
+                else:
+                    x = out
+                    jax.block_until_ready(x)
+                dt = time.perf_counter() - tin
+
+                if leaves is not None:
+                    p_leaves, r_leaves = stage.split_leaves(leaves)
+                    key = f"mb{mb}_s{si}"
+                    kept[si] = p_leaves      # params: never offloaded
+                    if self._should_offload(si):
+                        self.spool.offload(key, list(r_leaves.values()))
+                    else:
+                        self.spool.keep(key, list(r_leaves.values()))
+                    profiles[si] = ModuleProfile(
+                        stage.name,
+                        _nbytes(list(r_leaves.values())), dt)
+                    stage.cell.setdefault("resid_idx", tuple(r_leaves))
+                del leaves
+
+            self.tracker.mark(f"backward_begin_mb{mb}")
+            bwd_begin_bytes = max(bwd_begin_bytes, self.tracker.current)
+
+            # ---------------- backward ----------------
+            g = jnp.ones((), jnp.float32)   # d loss
+            mb_grads: List[Any] = [None] * n_stages
+            carry_g = g
+            enc_grad = None
+            for si in range(n_stages - 1, -1, -1):
+                stage = self._stages[si]
+                key = f"mb{mb}_s{si}"
+                if si - 1 > 0:
+                    self.spool.prefetch(f"mb{mb}_s{si - 1}")
+                if si in recompute_in:
+                    outs = stage.bwd_recompute(stage_params[si],
+                                               recompute_in[si], carry_g)
+                    self.tracker.free((key, "k"), tag=f"ckpt_done:{key}")
+                    recompute_in.pop(si)
+                else:
+                    r_list = self.spool.fetch(key)
+                    leaves = [None] * stage.cell["n_leaves"]
+                    for i, l in kept[si].items():
+                        leaves[i] = l
+                    for i, l in zip(stage.cell["resid_idx"], r_list):
+                        leaves[i] = l
+                    outs = stage.bwd(tuple(leaves), carry_g)
+                    jax.block_until_ready(outs[0])
+                    self.spool.drop(key)
+                    kept.pop(si)
+                dp, dargs = outs[0], outs[1:]
+                mb_grads[si] = dp
+                # ---- cotangent routing
+                if stage.role == "head":
+                    carry_g = dargs[0]
+                elif stage.role == "layer":
+                    carry_g = dargs[0]
+                    if stage.takes_enc:
+                        denc = dargs[1]
+                        enc_grad = denc if enc_grad is None else \
+                            jax.tree.map(jnp.add, enc_grad, denc)
+                elif stage.role == "embed":
+                    # decoder stream exhausted; switch to encoder stream
+                    carry_g = enc_grad
+                elif stage.role in ("enc_final", "enc_layer"):
+                    carry_g = dargs[0]
+                # enc_embed / vlm_enc: chain ends
+            loss_total += float(loss)
+            if grads is None:
+                grads = mb_grads
+            else:
+                grads = [jax.tree.map(jnp.add, a, b)
+                         for a, b in zip(grads, mb_grads)]
+
+        # ---------------- optimizer ----------------
+        grads_tree = self._unstage_grads(grads)
+        scale = 1.0 / len(batches)
+        grads_tree = jax.tree.map(lambda g_: g_ * scale, grads_tree)
+        params, opt_state = self.optimizer.update(grads_tree, opt_state,
+                                                  params)
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        # The store tail is NOT synchronised here: adaptive offloading
+        # (§3.3.3) schedules writes to complete inside the backward pass,
+        # and any residue overlaps the next step's forward. Only the
+        # profiling step drains the queue (to measure write bandwidth).
+        if self.adaptive and self.plan is None and self._step == 0:
+            self.spool.wait_io()
+        step_time = time.perf_counter() - t0
+
+        if self.adaptive and self.plan is None and self._step == 0:
+            self._profiles = profiles
+            bw = self.spool.stats.write_bandwidth
+            self.plan = plan_offload(profiles, bw)
+        self._step += 1
+        return params, opt_state, StepReport(
+            loss=loss_total / len(batches), step_time=step_time,
+            peak_activation_bytes=self.tracker.peak,
+            backward_begin_bytes=bwd_begin_bytes,
+            stats=self.spool.stats, plan=self.plan)
+
+    def _unstage_grads(self, grads: List[Any]):
+        """Reassemble per-stage grads into the model params structure
+        (shared leaves — e.g. the embed table used by both encoder and
+        decoder embed stages — accumulate by addition)."""
+        out: Dict[str, Any] = {}
+
+        def merge(d: Dict[str, Any]):
+            for k, v in d.items():
+                if k in out:
+                    out[k] = jax.tree.map(jnp.add, out[k], v)
+                else:
+                    out[k] = v
+
+        seg_reps: Dict[Tuple[str, int], List[Any]] = {}
+        for stage, g in zip(self._stages, grads):
+            if stage.role in ("enc_layer", "layer"):
+                si, rep = self._seg_pos(stage.name)
+                kind = "enc" if stage.role == "enc_layer" else "dec"
+                seg_reps.setdefault((kind, si), []).append(g)
+            elif stage.role != "vlm_enc":
+                merge(g)
+
+        dec_sis = sorted(s for k, s in seg_reps if k == "dec")
+        if dec_sis:
+            out["segments"] = [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *seg_reps[("dec", si)]) for si in dec_sis]
+        enc_sis = sorted(s for k, s in seg_reps if k == "enc")
+        if enc_sis:
+            out["enc_segments"] = [
+                jax.tree.map(lambda *xs: jnp.stack(xs),
+                             *seg_reps[("enc", si)]) for si in enc_sis]
+        return out
+
+    def close(self):
+        self.spool.close()

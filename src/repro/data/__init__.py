@@ -1,0 +1,5 @@
+from repro.data.pipeline import (PackedDataset, ShardedLoader,
+                                 SyntheticMarkovLM, pack_documents)
+
+__all__ = ["SyntheticMarkovLM", "ShardedLoader", "PackedDataset",
+           "pack_documents"]

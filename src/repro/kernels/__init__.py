@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+The paper itself contributes no kernels (its substrate uses
+FlashAttention-2); these cover the hot loops of the assigned architectures:
+
+  flash_attention.py  fused GQA online-softmax attention (FA-2 on TPU)
+  ssd_scan.py         Mamba-2 state-space-duality chunked scan
+  rglru_scan.py       RG-LRU gated linear recurrence
+
+ops.py exposes the jit + custom_vjp wrappers; ref.py holds the pure-jnp
+oracles every kernel is allclose-tested against (interpret=True on CPU).
+"""

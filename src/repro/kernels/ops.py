@@ -1,0 +1,106 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Forward runs the fused Pallas kernel; backward is a custom_vjp against the
+mathematically identical pure-JAX formulation (recompute-based, the same
+residual policy FlashAttention-2 uses: save nothing but inputs, rebuild the
+tiles in the backward pass). On TPU the backward would be its own kernel
+pair (dq and dkv sweeps); the recompute-vjp here is bit-compatible with
+that and keeps the oracle authoritative for gradients.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rglru_scan import rglru_scan_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+
+
+# ------------------------------------------------------------ attention
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, window, logit_cap, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               logit_cap=logit_cap, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, logit_cap, interpret):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              logit_cap=logit_cap, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, logit_cap, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: ref.attention_reference(
+            q, k, v, causal=causal, window=window, logit_cap=logit_cap),
+        q, k, v)
+    return vjp(g)
+
+
+_flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_cap: float = 0.0, interpret: bool = False):
+    return _flash_attention(q, k, v, causal, window, logit_cap, interpret)
+
+
+# ------------------------------------------------------------ SSD scan
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _ssd_scan(xh, dA_log, B_s, C_s, chunk, interpret):
+    return ssd_scan_fwd(xh, dA_log, B_s, C_s, chunk=chunk,
+                        interpret=interpret)
+
+
+def _ssd_fwd(xh, dA_log, B_s, C_s, chunk, interpret):
+    out = ssd_scan_fwd(xh, dA_log, B_s, C_s, chunk=chunk,
+                       interpret=interpret)
+    return out, (xh, dA_log, B_s, C_s)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    xh, dA_log, B_s, C_s = res
+    _, vjp = jax.vjp(
+        lambda *a: ref.ssd_reference(*a), xh, dA_log, B_s, C_s)
+    return vjp(g)
+
+
+_ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(xh, dA_log, B_s, C_s, *, chunk: int = 128,
+             interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _ssd_scan(xh, dA_log, B_s, C_s, chunk, interpret)
+
+
+# ------------------------------------------------------------ RG-LRU scan
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rglru_scan(log_a, x, interpret):
+    return rglru_scan_fwd(log_a, x, interpret=interpret)
+
+
+def _rg_fwd(log_a, x, interpret):
+    return rglru_scan_fwd(log_a, x, interpret=interpret), (log_a, x)
+
+
+def _rg_bwd(interpret, res, g):
+    log_a, x = res
+    _, vjp = jax.vjp(lambda a, b: ref.rglru_reference(a, b), log_a, x)
+    return vjp(g)
+
+
+_rglru_scan.defvjp(_rg_fwd, _rg_bwd)
+
+
+def rglru_scan(log_a, x, *, interpret: bool = False):
+    return _rglru_scan(log_a, x, interpret)

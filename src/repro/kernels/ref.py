@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately the *simplest correct* formulations (full score
+matrix, exact sequential recurrences) — independent of both the kernels and
+the production chunked paths in models/, so each of the three
+implementations (kernel, production XLA path, oracle) cross-checks the
+other two.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def attention_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                        logit_cap: float = 0.0):
+    """Direct softmax attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kx = jnp.repeat(k, G, axis=2).astype(jnp.float32)  # (B,Skv,Hq,D)
+    vx = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx)
+    s = s / jnp.sqrt(jnp.float32(D))
+    if logit_cap:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    iq = jnp.arange(Sq)[:, None]
+    jk = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= jk <= iq
+    if window:
+        mask &= jk > iq - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return o.astype(q.dtype)
+
+
+def ssd_reference(xh, dA_log, B_s, C_s):
+    """Exact sequential SSD recurrence (no chunking).
+
+    xh: (B,S,H,P) f32; dA_log: (B,S,H); B_s, C_s: (B,S,N).
+    state_t = exp(dA_log_t) * state_{t-1} + B_t (x) xh_t
+    y_t     = C_t . state_t
+    Returns (y (B,S,H,P) f32, final state (B,H,P,N) f32)."""
+    B, S, H, P = xh.shape
+    N = B_s.shape[-1]
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = (state * jnp.exp(a_t)[:, :, None, None]
+                 + jnp.einsum("bn,bhp->bhpn", b_t, x_t))
+        y_t = jnp.einsum("bn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (xh.swapaxes(0, 1).astype(jnp.float32),
+          dA_log.swapaxes(0, 1).astype(jnp.float32),
+          B_s.swapaxes(0, 1).astype(jnp.float32),
+          C_s.swapaxes(0, 1).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state
+
+
+def rglru_reference(log_a, x):
+    """Exact sequential h_t = exp(log_a_t) h_{t-1} + x_t over axis 1."""
+    def step(h, inp):
+        a_t, x_t = inp
+        h = jnp.exp(a_t) * h + x_t
+        return h, h
+
+    h0 = jnp.zeros(x.shape[:1] + x.shape[2:], jnp.float32)
+    _, hs = jax.lax.scan(
+        step, h0, (log_a.swapaxes(0, 1).astype(jnp.float32),
+                   x.swapaxes(0, 1).astype(jnp.float32)))
+    return hs.swapaxes(0, 1)

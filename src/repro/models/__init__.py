@@ -1,0 +1,4 @@
+from repro.models.api import ModelApi, build_model
+from repro.models.transformer import RunSettings, build_segments
+
+__all__ = ["ModelApi", "build_model", "RunSettings", "build_segments"]

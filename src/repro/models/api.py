@@ -1,0 +1,366 @@
+"""Public model API: build_model(config) -> ModelApi.
+
+A ModelApi bundles the functional pieces every launcher/benchmark needs:
+  init(rng)                          -> params
+  forward(params, batch, settings)   -> (logits_f32, aux)        # full seq
+  loss(params, batch, settings)      -> (scalar, metrics)
+  prefill(params, batch, settings)   -> (last_logits, cache)
+  decode_step(params, cache, batch, pos, settings) -> (logits, cache)
+  input_specs(shape)                 -> batch of ShapeDtypeStructs
+
+Embeddings note (DESIGN.md §2): input and output embeddings are stored
+untied even for archs that tie them (sharding: the input table is gathered
+row-wise, the output table is a vocab-sharded matmul; tying would force one
+of the two into a pathological layout). The vocab is padded to a multiple of
+256 and padded logits are masked to -inf before the softmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import (dtype_of, embed_init, hint, init_norm,
+                                 rms_norm, softcap)
+from repro.models.transformer import (BlockDef, RunSettings, SegmentDef,
+                                      apply_block, apply_block_decode,
+                                      build_segments, init_block, init_cache,
+                                      remat_policy)
+
+Params = Dict[str, Any]
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 0.001
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    segments: Tuple[SegmentDef, ...]
+    enc_segments: Tuple[SegmentDef, ...]  # empty unless encoder-decoder
+    init: Callable
+    forward: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    input_specs: Callable
+    init_cache: Callable
+
+
+# -------------------------------------------------------------- helpers
+
+def _init_segments(key, segs, cfg, dtype):
+    out = []
+    for seg in segs:
+        keys = jax.random.split(key, seg.n_repeat + 1)
+        key = keys[0]
+        def one(k, seg=seg):
+            ks = jax.random.split(k, len(seg.blocks))
+            return {f"b{i}": init_block(ks[i], b, cfg, dtype)
+                    for i, b in enumerate(seg.blocks)}
+        out.append(jax.vmap(one)(keys[1:]))
+    return out
+
+
+def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
+                  emit_cache=False, positions=None, cache_len=0):
+    """Apply all segments. Returns (x, caches, aux_totals)."""
+    wrap = remat_policy(settings)
+    aux_tot: Dict[str, jnp.ndarray] = {}
+    caches = []
+
+    for seg, p_stack in zip(segs, seg_params):
+        def body(x, p_layer, seg=seg):
+            aux: Dict[str, jnp.ndarray] = {}
+            cache_entries = {}
+            for i, bdef in enumerate(seg.blocks):
+                x, c = apply_block(bdef, p_layer[f"b{i}"], x, cfg, settings,
+                                   positions=positions, enc_kv=enc_states,
+                                   aux=aux)
+                if emit_cache:
+                    cache_entries[f"b{i}"] = _to_decode_cache(
+                        bdef, c, cfg, cache_len)
+            return x, (cache_entries if emit_cache else None, aux)
+
+        body = wrap(body)
+        x, (cache_stack, aux_stack) = jax.lax.scan(
+            lambda c, p: body(c, p), x, p_stack)
+        caches.append(cache_stack)
+        for k, v in aux_stack.items():
+            aux_tot[k] = aux_tot.get(k, 0.0) + jnp.sum(v)
+    return x, caches, aux_tot
+
+
+def _to_decode_cache(bdef: BlockDef, cache, cfg: ModelConfig,
+                     cache_len: int):
+    """Convert a prefill cache entry to the decode layout.
+
+    Attention caches are sized min(window, cache_len) (ring for windowed
+    layers): token at position p lives at slot p % W, so a prefill of S
+    tokens contributes its last W via a roll of (S - W) % W."""
+    if bdef.mixer == "attn":
+        k, v = cache
+        S = k.shape[1]
+        target = min(bdef.window, cache_len) if bdef.window else cache_len
+        if S >= target:
+            k, v = k[:, -target:], v[:, -target:]
+            shift = (S - target) % target
+            if shift:
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
+        else:
+            pad = [(0, 0), (0, target - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k, "v": v}
+    if bdef.mixer == "cross":
+        k, v = cache
+        return {"k": k, "v": v}
+    return cache  # rglru / ssm already in decode layout
+
+
+def _embed_in(params, batch, cfg: ModelConfig, settings):
+    dtype = dtype_of(settings.param_dtype)
+    if cfg.input_kind == "embeddings":
+        x = batch["embeddings"].astype(dtype)
+        x = jnp.einsum("bsd,de->bse", x, params["frontend_proj"])
+    else:
+        x = params["embed"][batch["tokens"]]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    if not cfg.use_rope:
+        S = x.shape[1]
+        x = x + params["pos_embed"][:S][None].astype(dtype)
+    # gathers from the vocab-sharded table come out with ambiguous layout;
+    # pin batch to the dp axes so the whole stack keeps it (layers.hint).
+    return hint(x, settings, "b", None, None)
+
+
+def _head(params, x, cfg: ModelConfig, settings=None):
+    x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = logits.astype(jnp.float32)
+    # batch over dp, vocab over tp — without this GSPMD materialised the
+    # full-batch fp32 logits (40 GB/device) on the 256-chip dry-run.
+    logits = hint(logits, settings, "b", None, "m")
+    if cfg.final_logit_softcap:
+        logits = softcap(logits, cfg.final_logit_softcap)
+    # mask the padded vocab tail
+    if cfg.padded_vocab != cfg.vocab_size:
+        bias = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                         0.0, -1e30).astype(jnp.float32)
+        logits = logits + bias
+    return logits
+
+
+# -------------------------------------------------------------- build
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    cfg = cfg.validate()
+    segs = tuple(build_segments(cfg))
+    enc_segs: Tuple[SegmentDef, ...] = ()
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, causal=False)
+        enc_segs = tuple(build_segments(enc_cfg))
+        dec_blocks = (BlockDef("attn", mlp=None),
+                      BlockDef("cross", mlp="dense"))
+        segs = (SegmentDef(dec_blocks, cfg.num_decoder_layers),)
+
+    def init(rng) -> Params:
+        dtype = dtype_of(cfg.dtype)
+        ks = jax.random.split(rng, 8)
+        params: Params = {"final_norm": init_norm(cfg.d_model, dtype)}
+        if cfg.input_kind == "embeddings":
+            eye = jnp.eye(cfg.d_model, dtype=jnp.float32)
+            noise = 0.02 * jax.random.normal(ks[0],
+                                             (cfg.d_model, cfg.d_model))
+            params["frontend_proj"] = (eye + noise).astype(dtype)
+        else:
+            params["embed"] = embed_init(
+                ks[0], (cfg.padded_vocab, cfg.d_model), dtype)
+        params["unembed"] = embed_init(
+            ks[1], (cfg.d_model, cfg.padded_vocab), dtype)
+        if not cfg.use_rope:
+            params["pos_embed"] = embed_init(
+                ks[2], (cfg.max_position, cfg.d_model), dtype)
+        params["segments"] = _init_segments(ks[3], segs, cfg, dtype)
+        if enc_segs:
+            params["enc_segments"] = _init_segments(ks[4], enc_segs,
+                                                    dataclasses.replace(
+                                                        cfg, causal=False),
+                                                    dtype)
+            params["enc_norm"] = init_norm(cfg.d_model, dtype)
+        return params
+
+    def _encode(params, batch, settings):
+        enc_cfg = dataclasses.replace(cfg, causal=False)
+        x = _embed_in(params, {"tokens": batch["enc_tokens"]}, enc_cfg,
+                      settings)
+        pos = jnp.arange(x.shape[1])
+        x, _, _ = _run_segments(x, params["enc_segments"], enc_segs,
+                                enc_cfg, settings, positions=pos)
+        return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+    def _enc_states(params, batch, settings):
+        if cfg.family == "encdec":
+            return _encode(params, batch, settings)
+        if cfg.family == "vlm":
+            # stub frontend: precomputed patch embeddings at d_model
+            return batch["enc_embeddings"].astype(dtype_of(cfg.dtype))
+        return None
+
+    def forward(params, batch, settings: RunSettings, *, emit_cache=False,
+                cache_len=0):
+        enc_states = _enc_states(params, batch, settings)
+        x = _embed_in(params, batch, cfg, settings)
+        positions = jnp.arange(x.shape[1]) if cfg.use_rope else None
+        x, caches, aux = _run_segments(
+            x, params["segments"], segs, cfg, settings,
+            enc_states=enc_states, emit_cache=emit_cache,
+            positions=positions, cache_len=cache_len or x.shape[1])
+        logits = _head(params, x, cfg, settings)
+        return (logits, caches, aux) if emit_cache else (logits, aux)
+
+    def _ce_terms(logits, labels):
+        """(sum nll, token count) — vocab-parallel-friendly label pick:
+        take_along_axis is a gather along the tp-sharded vocab dim and
+        makes GSPMD all-gather the logits; the masked reduction
+        partitions cleanly (Megatron's vocab-parallel cross-entropy)."""
+        mask = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        vmask = (jnp.arange(logits.shape[-1],
+                            dtype=labels.dtype)[None, None]
+                 == jnp.maximum(labels, 0)[..., None])
+        picked = jnp.sum(jnp.where(vmask, logits, 0.0), axis=-1)
+        return ((lse - picked) * mask).sum(), mask.sum()
+
+    def forward_hidden(params, batch, settings: RunSettings):
+        """Backbone only: final hidden states (pre-head), aux losses."""
+        enc_states = _enc_states(params, batch, settings)
+        x = _embed_in(params, batch, cfg, settings)
+        positions = jnp.arange(x.shape[1]) if cfg.use_rope else None
+        x, _, aux = _run_segments(
+            x, params["segments"], segs, cfg, settings,
+            enc_states=enc_states, positions=positions,
+            cache_len=x.shape[1])
+        return x, aux
+
+    def loss(params, batch, settings: RunSettings):
+        labels = batch["labels"]
+        S = labels.shape[1]
+        if settings.ce_chunk and S % settings.ce_chunk == 0 \
+                and S > settings.ce_chunk:
+            # chunked CE: the (B, S, V) fp32 logits never materialise —
+            # each chunk's head matmul + CE runs under remat, so backward
+            # recomputes one chunk of logits at a time. At V=152k, B=256,
+            # S=4096 this removes ~2.5 GB/device of fp32 logits (x3 with
+            # AD buffers) from the dry-run peak.
+            x, aux = forward_hidden(params, batch, settings)
+            nc = S // settings.ce_chunk
+            xc = x.reshape(x.shape[0], nc, settings.ce_chunk, -1)
+            lc = labels.reshape(labels.shape[0], nc, settings.ce_chunk)
+
+            @jax.checkpoint
+            def chunk_terms(args):
+                xi, li = args
+                logits = _head(params, xi, cfg, settings)
+                return _ce_terms(logits, li)
+
+            nll, toks = jax.lax.map(
+                chunk_terms, (xc.swapaxes(0, 1), lc.swapaxes(0, 1)))
+            ce = nll.sum() / jnp.maximum(toks.sum(), 1.0)
+            tokens = toks.sum()
+        else:
+            logits, aux = forward(params, batch, settings)
+            nll, tokens = _ce_terms(logits, labels)
+            ce = nll / jnp.maximum(tokens, 1.0)
+        total = ce
+        metrics = {"ce": ce, "tokens": tokens}
+        if "moe_lb" in aux:
+            total = total + MOE_LB_COEF * aux["moe_lb"] \
+                          + MOE_Z_COEF * aux["moe_z"]
+            metrics.update(moe_lb=aux["moe_lb"], moe_z=aux["moe_z"])
+        metrics["loss"] = total
+        return total, metrics
+
+    def prefill(params, batch, settings: RunSettings, *, emit_cache=True,
+                cache_len=0):
+        out = forward(params, batch, settings, emit_cache=emit_cache,
+                      cache_len=cache_len)
+        if emit_cache:
+            logits, caches, _ = out
+            return logits[:, -1:], caches
+        logits, _ = out
+        return logits[:, -1:], None
+
+    def decode_step(params, cache, batch, pos, settings: RunSettings):
+        """One token for the whole batch. batch: {"tokens": (B, 1)} (or
+        {"embeddings"}). pos: scalar int32 position of this token."""
+        enc_states = None  # cross K/V live in the cache during decode
+        if cfg.input_kind == "embeddings":
+            x = batch["embeddings"].astype(dtype_of(settings.param_dtype))
+            x = jnp.einsum("bsd,de->bse", x, params["frontend_proj"])
+        else:
+            x = params["embed"][batch["tokens"]]
+        if cfg.scale_embed:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if not cfg.use_rope:
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], pos, 1, axis=0)[None].astype(x.dtype)
+
+        new_caches = []
+        for seg, p_stack, c_stack in zip(segs, params["segments"], cache):
+            def body(x1, inp, seg=seg):
+                p_layer, c_layer = inp
+                new_c = {}
+                for i, bdef in enumerate(seg.blocks):
+                    x1, nc = apply_block_decode(
+                        bdef, p_layer[f"b{i}"], x1, c_layer[f"b{i}"], pos,
+                        cfg, settings)
+                    new_c[f"b{i}"] = nc
+                return x1, new_c
+            x, nc_stack = jax.lax.scan(body, x, (p_stack, c_stack))
+            new_caches.append(nc_stack)
+        logits = _head(params, x, cfg, settings)
+        return logits, new_caches
+
+    def input_specs(shape: ShapeConfig, *, for_loss: bool = True):
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        if shape.kind == "decode":
+            batch = ({"embeddings": jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                                         bf16)}
+                     if cfg.input_kind == "embeddings"
+                     else {"tokens": jax.ShapeDtypeStruct((B, 1), i32)})
+            cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+            return {"batch": batch, "cache": cache,
+                    "pos": jax.ShapeDtypeStruct((), i32)}
+        batch: Dict[str, Any] = {}
+        if cfg.input_kind == "embeddings":
+            batch["embeddings"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       bf16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            batch["enc_embeddings"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), bf16)
+        if cfg.family == "encdec":
+            batch["enc_tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if for_loss and shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return {"batch": batch}
+
+    return ModelApi(
+        cfg=cfg, segments=segs, enc_segments=enc_segs, init=init,
+        forward=forward, loss=loss, prefill=prefill,
+        decode_step=decode_step, input_specs=input_specs,
+        init_cache=lambda B, S, dtype=jnp.bfloat16: init_cache(
+            cfg, B, S, dtype),
+    )

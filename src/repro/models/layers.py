@@ -1,0 +1,240 @@
+"""Shared neural-net building blocks (pure JAX, functional params-as-pytrees)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- init
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    """Truncated-normal fan-in init (matches Megatron's scaled init)."""
+    std = 1.0 / math.sqrt(in_axis_size)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+#
+# rms_norm and the activations below carry custom_vjp rules that save only
+# their *inputs* and recompute the rest in backward. Without this, the
+# eager-vjp residual set (what the TBA spool offloads) holds every
+# primitive intermediate — measured 36*h elements/token/layer on BERT vs
+# the fused-op count of ~16*h that PyTorch/Megatron (the paper's
+# substrate) materialises. With these rules the offload traffic matches
+# the paper's llm-analysis estimate (benchmarks/table4_offload.py).
+
+
+def _rms_norm_impl(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x, scale, eps):
+    return _rms_norm_impl(x, scale, eps)
+
+
+def _rms_fwd(x, scale, eps):
+    return _rms_norm_impl(x, scale, eps), (x, scale)
+
+
+def _rms_bwd(eps, res, g):
+    x, scale = res
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    xhat = x32 * r
+    gs = g32 * (1.0 + scale.astype(jnp.float32))
+    dx = r * (gs - xhat * jnp.mean(gs * xhat, axis=-1, keepdims=True))
+    dscale = jnp.sum(g32 * xhat,
+                     axis=tuple(range(x.ndim - 1))).astype(scale.dtype)
+    return dx.astype(x.dtype), dscale
+
+
+rms_norm.defvjp(_rms_fwd, _rms_bwd)
+
+
+def init_norm(d, dtype):
+    # Stored as "scale - 1" (gemma convention) so zeros == identity.
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- misc
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ------------------------------------------------- sharding hints
+#
+# GSPMD propagation loses the batch sharding inside nested scans (the
+# attention chunk loop) and on gathers from vocab-sharded tables; these
+# pathologies replicate the global batch per device (measured: 48 GB/device
+# attention carries on qwen train_4k). `hint` pins activations to the
+# settings' dp/tp axes wherever a dimension is divisible, and is a no-op
+# when no mesh is configured (single-device tests).
+
+def hint(x, settings, *dims):
+    """dims: one of 'b' (batch -> dp axes), 'h'/'m' (heads/model -> tp
+    axis), None (replicated) per array dimension."""
+    mesh = getattr(settings, "mesh", None)
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    parts = []
+    for dim, size in zip(dims, x.shape):
+        if dim == "b" and settings.dp_axes:
+            n = 1
+            for a in settings.dp_axes:
+                n *= mesh.shape[a]
+            parts.append(settings.dp_axes if size % n == 0 else None)
+        elif dim in ("h", "m") and settings.tp_axis:
+            n = mesh.shape[settings.tp_axis]
+            parts.append(settings.tp_axis if size % n == 0 else None)
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+
+# input-saving activations (see the norms note above): one residual, not
+# the 3-4 primitive intermediates of the composite jax.nn forms.
+
+@jax.custom_vjp
+def gelu(x):
+    return jax.nn.gelu(x, approximate=False)
+
+
+def _gelu_fwd(x):
+    return jax.nn.gelu(x, approximate=False), x
+
+
+def _gelu_bwd(x, g):
+    x32 = x.astype(jnp.float32)
+    cdf = 0.5 * (1.0 + jax.lax.erf(x32 / jnp.sqrt(jnp.float32(2.0))))
+    pdf = jnp.exp(-0.5 * x32 * x32) / jnp.sqrt(jnp.float32(2.0 * math.pi))
+    return ((g.astype(jnp.float32) * (cdf + x32 * pdf)).astype(x.dtype),)
+
+
+gelu.defvjp(_gelu_fwd, _gelu_bwd)
+
+
+@jax.custom_vjp
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def _silu_fwd(x):
+    return jax.nn.silu(x), x
+
+
+def _silu_bwd(x, g):
+    x32 = x.astype(jnp.float32)
+    s = jax.nn.sigmoid(x32)
+    return ((g.astype(jnp.float32) * s * (1.0 + x32 * (1.0 - s)))
+            .astype(x.dtype),)
+
+
+silu.defvjp(_silu_fwd, _silu_bwd)
+
+
+def activation(name: str):
+    return {"silu": silu, "gelu": gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_mlp(key, d_model, d_ff, glu: bool, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), d_ff, dtype),
+    }
+    if glu:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), d_model, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x, act_name: str, glu: bool):
+    act = activation(act_name)
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if glu:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    from jax.ad_checkpoint import checkpoint_name
+    h = checkpoint_name(h, "mlp_hidden")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+# ---------------------------------------------------------------- conv1d (causal, depthwise)
+
+
+def init_conv1d(key, width, channels, dtype) -> Params:
+    return {"w": dense_init(key, (width, channels), width, dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def apply_conv1d(p: Params, x, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv. x: (B, S, C). state: (B, W-1, C) or None.
+
+    Returns (y, new_state). With state=None, left-pads with zeros (training/
+    prefill); new_state is the last W-1 inputs for streaming decode.
+    """
+    w = p["w"]
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)             # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    y = y + p["b"]
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    return y, new_state

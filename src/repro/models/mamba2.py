@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD — state-space duality) mixer block. [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence); decode uses the O(1) recurrent update. The
+XLA path here is the oracle for kernels/ssd_scan.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_conv1d, dense_init, init_conv1d
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    state: int
+    conv_channels: int
+
+
+def ssm_dims(cfg: ModelConfig) -> SSMDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_channels = d_inner + 2 * cfg.ssm_state_dim  # x, B, C convolved
+    return SSMDims(d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state_dim,
+                   conv_channels)
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    dims = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    D = cfg.d_model
+    return {
+        "w_zx": dense_init(ks[0], (D, 2 * dims.d_inner), D, dtype),
+        "w_bc": dense_init(ks[1], (D, 2 * dims.state), D, dtype),
+        "w_dt": dense_init(ks[2], (D, dims.n_heads), D, dtype),
+        "dt_bias": jnp.zeros((dims.n_heads,), jnp.float32),
+        "conv": init_conv1d(ks[3], cfg.ssm_conv_width, dims.conv_channels,
+                            dtype),
+        "A_log": jnp.zeros((dims.n_heads,), jnp.float32),
+        "D_skip": jnp.ones((dims.n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((dims.d_inner,), dtype),
+        "w_out": dense_init(ks[4], (dims.d_inner, D), dims.d_inner, dtype),
+    }
+
+
+def _gated_norm(y, z, scale, eps):
+    y32 = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32)))
+
+
+def _split_proj(p, x, dims: SSMDims):
+    zx = jnp.einsum("...d,de->...e", x, p["w_zx"])
+    z, xs = jnp.split(zx, 2, axis=-1)
+    bc = jnp.einsum("...d,de->...e", x, p["w_bc"])
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    return z, xs, bc, dt
+
+
+def ssd_chunked(xh, dA_log, B_s, C_s, chunk: int,
+                state0: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan (pure JAX oracle).
+
+    xh:    (B, S, H, P)  inputs scaled by dt
+    dA_log:(B, S, H)     log decay per step (dt * A, A < 0)
+    B_s:   (B, S, N)     input projection (n_groups=1, shared over heads)
+    C_s:   (B, S, N)     output projection
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    B, S, H, Pd = xh.shape
+    N = B_s.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    xc = xh.reshape(B, nc, chunk, H, Pd).astype(jnp.float32)
+    ac = dA_log.reshape(B, nc, chunk, H).astype(jnp.float32)
+    bc = B_s.reshape(B, nc, chunk, N).astype(jnp.float32)
+    cc = C_s.reshape(B, nc, chunk, N).astype(jnp.float32)
+
+    La = jnp.cumsum(ac, axis=2)                       # (B,nc,Q,H) cumulative
+    # --- intra-chunk (quadratic) term ---
+    g = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # (B,nc,Q,Q)
+    dd = La[:, :, :, None, :] - La[:, :, None, :, :]  # (B,nc,Q,Q,H) Li - Lj
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])
+    m = jnp.where(causal[None, None, :, :, None], jnp.exp(dd), 0.0)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", g, m, xc)
+
+    # --- chunk states ---
+    # state contribution of step j to end of its chunk: exp(La_last - La_j)
+    decay_to_end = jnp.exp(La[:, :, -1:, :] - La)     # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, bc, xc)
+
+    # --- inter-chunk recurrence over nc (sequential scan) ---
+    chunk_decay = jnp.exp(La[:, :, -1, :])            # (B,nc,H)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+
+    def body(state, inp):
+        dec, s_new = inp                              # (B,H), (B,H,P,N)
+        state_in = state                              # state BEFORE chunk
+        state = state * dec[:, :, None, None] + s_new
+        return state, state_in
+
+    (final_state, states_in) = jax.lax.scan(
+        body, state0.astype(jnp.float32),
+        (chunk_decay.swapaxes(0, 1), s_chunk.swapaxes(0, 1)))
+    states_in = states_in.swapaxes(0, 1)              # (B,nc,H,P,N)
+
+    # --- inter-chunk output term ---
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                         jnp.exp(La), cc, states_in)
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, final_state
+
+
+def apply_mamba2(p, x, cfg: ModelConfig, *, impl: str = "xla"):
+    """Training/prefill. x: (B, S, D) -> (y, final_cache)."""
+    dims = ssm_dims(cfg)
+    B, S, D = x.shape
+    z, xs, bc, dt = _split_proj(p, x, dims)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out, conv_state = apply_conv1d(p["conv"], conv_in)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs = conv_out[..., :dims.d_inner]
+    B_s = conv_out[..., dims.d_inner:dims.d_inner + dims.state]
+    C_s = conv_out[..., dims.d_inner + dims.state:]
+
+    A = -jnp.exp(p["A_log"])                           # (H,) negative
+    dA_log = dt * A                                    # (B,S,H)
+    xh = xs.reshape(B, S, dims.n_heads, dims.head_dim)
+    xh_dt = xh.astype(jnp.float32) * dt[..., None]
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        y, final_state = kops.ssd_scan(
+            xh_dt, dA_log, B_s, C_s, chunk=cfg.ssm_chunk,
+            interpret=(impl == "pallas_interpret"))
+    else:
+        y, final_state = ssd_chunked(xh_dt, dA_log, B_s, C_s, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D_skip"][:, None]
+    y = y.reshape(B, S, dims.d_inner)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("...e,ed->...d", y, p["w_out"])
+    cache = {"conv": conv_state, "state": final_state}
+    return out, cache
+
+
+def decode_mamba2(p, x1, cache, cfg: ModelConfig):
+    """One-token decode. x1: (B, 1, D); cache {conv (B,W-1,C), state}."""
+    dims = ssm_dims(cfg)
+    B = x1.shape[0]
+    z, xs, bc, dt = _split_proj(p, x1, dims)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv_out, conv_state = apply_conv1d(p["conv"], conv_in, cache["conv"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x1.dtype)
+    xs = conv_out[..., :dims.d_inner]
+    B_s = conv_out[..., dims.d_inner:dims.d_inner + dims.state]
+    C_s = conv_out[..., dims.d_inner + dims.state:]
+
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0] * A)                         # (B,H)
+    xh = xs.reshape(B, dims.n_heads, dims.head_dim).astype(jnp.float32)
+    xh_dt = xh * dt[:, 0, :, None]
+    state = cache["state"]
+    state = (state * dA[:, :, None, None]
+             + jnp.einsum("bn,bhp->bhpn", B_s[:, 0].astype(jnp.float32),
+                          xh_dt))
+    y = jnp.einsum("bn,bhpn->bhp", C_s[:, 0].astype(jnp.float32), state)
+    y = y + xh * p["D_skip"][:, None]
+    y = y.reshape(B, 1, dims.d_inner)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps).astype(x1.dtype)
+    out = jnp.einsum("...e,ed->...d", y, p["w_out"])
+    return out, {"conv": conv_state, "state": state}

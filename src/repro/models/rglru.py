@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma). [arXiv:2402.19427]
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-dependent gates.
+
+Training/prefill uses an associative scan over the sequence (XLA path; the
+Pallas kernel in kernels/rglru_scan.py is the chunked TPU version); decode is
+a single-step update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_conv1d, dense_init, init_conv1d
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    W = cfg.rglru_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "w_branch_gate": dense_init(ks[0], (D, W), D, dtype),
+        "w_in": dense_init(ks[1], (D, W), D, dtype),
+        "conv": init_conv1d(ks[2], cfg.rglru_conv_width, W, dtype),
+        "w_a": dense_init(ks[3], (W, W), W, dtype),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": dense_init(ks[4], (W, W), W, dtype),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        # softplus(lambda_p) ~ 0.3..1 -> slow decay at init
+        "lambda_p": jnp.full((W,), 0.5, jnp.float32),
+        "w_out": dense_init(ks[5], (W, D), W, dtype),
+    }
+
+
+def _gates(p, u):
+    """u: (..., W) post-conv signal -> (log_a, scaled_input) fp32."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u32,
+                                  p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u32,
+                                  p["w_i"].astype(jnp.float32)) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda_p"]) * r          # (..., W) < 0
+    a2 = jnp.exp(2.0 * log_a)
+    scaled = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * u32)
+    return log_a, scaled
+
+
+def rglru_scan_xla(log_a, x):
+    """Associative scan of h_t = a_t h_{t-1} + x_t over axis 1.
+
+    log_a, x: (B, S, W) fp32. Returns h: (B, S, W)."""
+    def combine(c1, c2):
+        (la1, b1), (la2, b2) = c1, c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+    la, h = jax.lax.associative_scan(combine, (log_a, x), axis=1)
+    return h
+
+
+def apply_rglru(p, x, cfg: ModelConfig, *, impl: str = "xla"):
+    """Training/prefill. x: (B, S, D) -> (y, cache)."""
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", x, p["w_branch_gate"])
+                       .astype(jnp.float32))
+    u = jnp.einsum("...d,dw->...w", x, p["w_in"])
+    u, conv_state = apply_conv1d(p["conv"], u)
+    log_a, scaled = _gates(p, u)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ops as kops
+        h = kops.rglru_scan(log_a, scaled,
+                            interpret=(impl == "pallas_interpret"))
+    else:
+        h = rglru_scan_xla(log_a, scaled)
+    y = (h * gate).astype(x.dtype)
+    out = jnp.einsum("...w,wd->...d", y, p["w_out"])
+    cache = {"conv": conv_state, "h": h[:, -1]}
+    return out, cache
+
+
+def decode_rglru(p, x1, cache, cfg: ModelConfig):
+    """One-token decode. x1: (B, 1, D)."""
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", x1, p["w_branch_gate"])
+                       .astype(jnp.float32))
+    u = jnp.einsum("...d,dw->...w", x1, p["w_in"])
+    u, conv_state = apply_conv1d(p["conv"], u, cache["conv"])
+    log_a, scaled = _gates(p, u)
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + scaled[:, 0]      # (B, W)
+    y = (h[:, None] * gate).astype(x1.dtype)
+    out = jnp.einsum("...w,wd->...d", y, p["w_out"])
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,353 @@
+"""Model assembly: blocks -> segments (scanned super-layers) -> full models.
+
+Every architecture is a list of *segments*; a segment is a tuple of
+heterogeneous blocks (a "super-layer") repeated n times via lax.scan with
+stacked parameters. This keeps the HLO small for 100-layer models while
+supporting mixed-kind stacks (gemma2 local/global alternation,
+recurrentgemma's rglru-rglru-attn pattern, llama-3.2-vision's every-5th
+cross-attention layer, kimi's leading dense layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2 as m2
+from repro.models import rglru as rg
+from repro.models.attention import attend, attend_decode
+from repro.models.layers import (apply_mlp, apply_rope, dense_init, dtype_of,
+                                 embed_init, init_mlp, init_norm, rms_norm,
+                                 softcap)
+from repro.models.moe import MoESettings, apply_moe, init_moe
+
+Params = Dict[str, Any]
+
+
+# ====================================================================
+# Segment construction
+# ====================================================================
+
+@dataclass(frozen=True)
+class BlockDef:
+    mixer: str                    # "attn" | "cross" | "rglru" | "ssm"
+    window: int = 0               # sliding window for attn (0 = full)
+    mlp: Optional[str] = "dense"  # "dense" | "moe" | None
+    dense_ff: int = 0             # override d_ff for this block's dense MLP
+
+
+@dataclass(frozen=True)
+class SegmentDef:
+    blocks: Tuple[BlockDef, ...]
+    n_repeat: int
+
+
+def build_segments(cfg: ModelConfig) -> List[SegmentDef]:
+    if cfg.family == "ssm":
+        return [SegmentDef((BlockDef("ssm", mlp=None),), cfg.num_layers)]
+
+    if cfg.hybrid_pattern:
+        pat = tuple(
+            BlockDef("attn", window=cfg.sliding_window) if k == "attn"
+            else BlockDef("rglru") for k in cfg.hybrid_pattern)
+        full, rem = divmod(cfg.num_layers, len(pat))
+        segs = [SegmentDef(pat, full)] if full else []
+        if rem:
+            segs.append(SegmentDef(pat[:rem], 1))
+        return segs
+
+    if cfg.cross_attn_period:
+        k = cfg.cross_attn_period
+        assert cfg.num_layers % k == 0
+        blocks = tuple([BlockDef("attn")] * (k - 1) + [BlockDef("cross")])
+        return [SegmentDef(blocks, cfg.num_layers // k)]
+
+    mlp_kind = "moe" if cfg.moe_num_experts else "dense"
+    if cfg.local_global_period:
+        p = cfg.local_global_period
+        assert cfg.num_layers % p == 0
+        blocks = tuple(
+            BlockDef("attn",
+                     window=cfg.sliding_window if i < p - 1 else 0,
+                     mlp=mlp_kind)
+            for i in range(p))
+        return [SegmentDef(blocks, cfg.num_layers // p)]
+
+    segs = []
+    n_dense = cfg.moe_first_dense_layers if mlp_kind == "moe" else 0
+    if n_dense:
+        segs.append(SegmentDef(
+            (BlockDef("attn", window=cfg.sliding_window, mlp="dense",
+                      dense_ff=cfg.moe_dense_ff or cfg.d_ff),), n_dense))
+    segs.append(SegmentDef(
+        (BlockDef("attn", window=cfg.sliding_window, mlp=mlp_kind),),
+        cfg.num_layers - n_dense))
+    return segs
+
+
+# ====================================================================
+# Run-time settings (how to execute, orthogonal to what the model is)
+# ====================================================================
+
+@dataclass(frozen=True)
+class RunSettings:
+    attn_impl: str = "xla"            # xla | pallas | pallas_interpret
+    attn_chunk: int = 1024
+    # Activation placement: "keep" | "remat" | "offload" | "offload_ssd"
+    # (the paper's three ROK strategies + the in-graph host-offload tier).
+    activation_policy: str = "keep"
+    offload_names: Tuple[str, ...] = ("blk_in",)
+    mesh: Any = None                  # jax Mesh (sharding hints + EP)
+    ep_axis: Optional[str] = None     # expert-parallel axis (MoE shard_map)
+    tp_axis: Optional[str] = None     # tensor-parallel axis (hints)
+    dp_axes: Tuple[str, ...] = ()
+    param_dtype: str = "bfloat16"
+    moe_capacity_factor: float = 1.25
+    # chunked cross-entropy: compute the vocab projection + CE per
+    # sequence chunk under remat (logits never fully materialise; bwd
+    # recomputes each chunk's logits). 0 = off.
+    ce_chunk: int = 0
+
+
+def remat_policy(settings: RunSettings):
+    """Returns (wrap_segment_body) implementing the placement strategy."""
+    pol = settings.activation_policy
+    if pol == "keep":
+        return lambda f: f
+    if pol == "remat":
+        return lambda f: jax.checkpoint(f, prevent_cse=False)
+    if pol in ("offload", "offload_ssd"):
+        policy = jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=list(settings.offload_names),
+            offload_src="device", offload_dst="pinned_host")
+        return lambda f: jax.checkpoint(f, policy=policy, prevent_cse=False)
+    if pol == "save_names":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            *settings.offload_names)
+        return lambda f: jax.checkpoint(f, policy=policy, prevent_cse=False)
+    raise ValueError(f"unknown activation policy {pol!r}")
+
+
+# ====================================================================
+# Block init
+# ====================================================================
+
+def _init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    D, Hq, KV, hd = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.resolved_head_dim)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, Hq, hd), D, dtype),
+        "wk": dense_init(ks[1], (D, KV, hd), D, dtype),
+        "wv": dense_init(ks[2], (D, KV, hd), D, dtype),
+        "wo": dense_init(ks[3], (Hq, hd, D), Hq * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq, hd), dtype)
+        p["bk"] = jnp.zeros((KV, hd), dtype)
+        p["bv"] = jnp.zeros((KV, hd), dtype)
+    return p
+
+
+def init_block(key, bdef: BlockDef, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm": init_norm(cfg.d_model, dtype)}
+    if bdef.mixer in ("attn", "cross"):
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    elif bdef.mixer == "rglru":
+        p["rglru"] = rg.init_rglru(ks[0], cfg, dtype)
+    elif bdef.mixer == "ssm":
+        p["ssm"] = m2.init_mamba2(ks[0], cfg, dtype)
+    if cfg.post_block_norm:
+        p["post_norm"] = init_norm(cfg.d_model, dtype)
+    if bdef.mlp == "dense":
+        ff = bdef.dense_ff or cfg.d_ff
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, ff, cfg.mlp_glu, dtype)
+        p["mlp_norm"] = init_norm(cfg.d_model, dtype)
+        if cfg.post_block_norm:
+            p["mlp_post_norm"] = init_norm(cfg.d_model, dtype)
+    elif bdef.mlp == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                            cfg.moe_num_experts, dtype)
+        if cfg.moe_shared_experts:
+            p["moe_shared"] = init_mlp(
+                ks[2], cfg.d_model, cfg.d_ff * cfg.moe_shared_experts,
+                True, dtype)
+        p["mlp_norm"] = init_norm(cfg.d_model, dtype)
+        if cfg.post_block_norm:
+            p["mlp_post_norm"] = init_norm(cfg.d_model, dtype)
+    return p
+
+
+# ====================================================================
+# Block apply — full sequence (train / prefill)
+# ====================================================================
+
+def _qkv(p, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.use_rope and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mlp_sublayer(bdef: BlockDef, p, x, cfg: ModelConfig,
+                  settings: RunSettings, aux: Dict):
+    if bdef.mlp is None:
+        return x
+    h = rms_norm(x, p["mlp_norm"]["scale"], cfg.norm_eps)
+    if bdef.mlp == "dense":
+        m = apply_mlp(p["mlp"], h, cfg.act, cfg.mlp_glu)
+    else:
+        moe_set = MoESettings(cfg.moe_num_experts, cfg.moe_top_k,
+                              settings.moe_capacity_factor, cfg.act)
+        m, moe_aux = apply_moe(p["moe"], h, moe_set, mesh=settings.mesh,
+                               ep_axis=settings.ep_axis,
+                               dp_axes=settings.dp_axes)
+        for k2, v2 in moe_aux.items():
+            aux[k2] = aux.get(k2, 0.0) + v2
+        if "moe_shared" in p:
+            m = m + apply_mlp(p["moe_shared"], h, cfg.act, True)
+    if cfg.post_block_norm:
+        m = rms_norm(m, p["mlp_post_norm"]["scale"], cfg.norm_eps)
+    return x + m
+
+
+def apply_block(bdef: BlockDef, p, x, cfg: ModelConfig,
+                settings: RunSettings, *, positions=None, enc_kv=None,
+                aux: Dict) -> Tuple[jnp.ndarray, Any]:
+    """Full-sequence block. Returns (x, cache_entry)."""
+    x = checkpoint_name(x, "blk_in")
+    h = rms_norm(x, p["norm"]["scale"], cfg.norm_eps)
+    cache = None
+    if bdef.mixer == "attn":
+        q, k, v = _qkv(p["attn"], h, cfg, positions)
+        o = attend(q, k, v, causal=cfg.causal, window=bdef.window,
+                   logit_cap=cfg.attn_logit_softcap,
+                   chunk=settings.attn_chunk, impl=settings.attn_impl,
+                   settings=settings)
+        o = checkpoint_name(o, "attn_out")
+        mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        cache = (k, v)
+    elif bdef.mixer == "cross":
+        # enc_kv: encoder hidden states (B, Se, D); each cross layer
+        # projects its own K/V (no RoPE on cross attention).
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+        ek = jnp.einsum("bsd,dhk->bshk", enc_kv, p["attn"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bshk", enc_kv, p["attn"]["wv"])
+        o = attend(q, ek, ev, causal=False, chunk=settings.attn_chunk,
+                   impl=settings.attn_impl, settings=settings)
+        mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        cache = (ek, ev)
+    elif bdef.mixer == "rglru":
+        mix, cache = rg.apply_rglru(p["rglru"], h, cfg,
+                                    impl=settings.attn_impl)
+    elif bdef.mixer == "ssm":
+        mix, cache = m2.apply_mamba2(p["ssm"], h, cfg,
+                                     impl=settings.attn_impl)
+    else:
+        raise ValueError(bdef.mixer)
+    if cfg.post_block_norm:
+        mix = rms_norm(mix, p["post_norm"]["scale"], cfg.norm_eps)
+    x = x + mix
+    x = _mlp_sublayer(bdef, p, x, cfg, settings, aux)
+    return x, cache
+
+
+# ====================================================================
+# Block apply — single-token decode against caches
+# ====================================================================
+
+def apply_block_decode(bdef: BlockDef, p, x1, cache, pos, cfg: ModelConfig,
+                       settings: RunSettings) -> Tuple[jnp.ndarray, Any]:
+    """x1: (B, 1, D). cache: per-mixer pytree. pos: scalar int32."""
+    h = rms_norm(x1, p["norm"]["scale"], cfg.norm_eps)
+    if bdef.mixer == "attn":
+        ck, cv = cache["k"], cache["v"]
+        S = ck.shape[1]
+        ring = bool(bdef.window) and S == bdef.window
+        q, k, v = _qkv(p["attn"], h, cfg,
+                       jnp.full((1,), pos, jnp.int32)[None]
+                       if cfg.use_rope else None)
+        slot = jnp.mod(pos, S) if ring else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 slot, axis=1)
+        o = attend_decode(q, ck, cv, pos, window=bdef.window,
+                          logit_cap=cfg.attn_logit_softcap, ring=ring)
+        mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        new_cache = {"k": ck, "v": cv}
+    elif bdef.mixer == "cross":
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"])
+        o = attend_decode(q, cache["k"], cache["v"],
+                          jnp.asarray(cache["k"].shape[1] - 1))
+        mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        new_cache = cache
+    elif bdef.mixer == "rglru":
+        mix, new_cache = rg.decode_rglru(p["rglru"], h, cache, cfg)
+    elif bdef.mixer == "ssm":
+        mix, new_cache = m2.decode_mamba2(p["ssm"], h, cache, cfg)
+    else:
+        raise ValueError(bdef.mixer)
+    if cfg.post_block_norm:
+        mix = rms_norm(mix, p["post_norm"]["scale"], cfg.norm_eps)
+    x1 = x1 + mix
+    aux: Dict = {}
+    x1 = _mlp_sublayer(bdef, p, x1, cfg, settings, aux)
+    return x1, new_cache
+
+
+# ====================================================================
+# Decode-cache construction
+# ====================================================================
+
+def init_block_cache(bdef: BlockDef, cfg: ModelConfig, batch: int,
+                     seq_len: int, dtype) -> Any:
+    """Zeroed cache entry for one block (shapes only matter for dry-run)."""
+    if bdef.mixer == "attn":
+        hd = cfg.resolved_head_dim
+        S = min(bdef.window, seq_len) if bdef.window else seq_len
+        shape = (batch, S, cfg.num_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if bdef.mixer == "cross":
+        hd = cfg.resolved_head_dim
+        shape = (batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if bdef.mixer == "rglru":
+        W = cfg.rglru_width or cfg.d_model
+        return {"conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, W),
+                                  dtype),
+                "h": jnp.zeros((batch, W), jnp.float32)}
+    if bdef.mixer == "ssm":
+        dims = m2.ssm_dims(cfg)
+        return {"conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                                   dims.conv_channels), dtype),
+                "state": jnp.zeros((batch, dims.n_heads, dims.head_dim,
+                                    dims.state), jnp.float32)}
+    raise ValueError(bdef.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    segs = build_segments(cfg)
+    cache = []
+    for seg in segs:
+        entries = {}
+        for i, bdef in enumerate(seg.blocks):
+            one = init_block_cache(bdef, cfg, batch, seq_len, dtype)
+            entries[f"b{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (seg.n_repeat,) + a.shape),
+                one)
+        cache.append(entries)
+    return cache

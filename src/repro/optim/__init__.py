@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (OptState, adamw, clip_by_global_norm,
+                                    sgd, zero1_shardings)
+
+__all__ = ["sgd", "adamw", "OptState", "clip_by_global_norm",
+           "zero1_shardings"]

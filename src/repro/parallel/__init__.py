@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (MeshAxes, batch_specs, cache_specs,
+                                     param_specs, with_sharding)
+
+__all__ = ["MeshAxes", "param_specs", "batch_specs", "cache_specs",
+           "with_sharding"]

@@ -1,0 +1,210 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer state, batches
+and decode caches, per architecture (DESIGN.md §4).
+
+Layout (GSPMD, production mesh ("pod",)"data","model"):
+  * batch / activations   — shard dim 0 (batch) over the dp axes
+    ("pod","data"); everything else replicated between ops, XLA propagates.
+  * weights               — Megatron TP over "model" (q heads, d_ff, vocab,
+    experts) + ZeRO-3/FSDP over "data" on the non-TP contraction dim, so
+    per-layer all-gathers ride the scan and the optimizer update is fully
+    sharded (ZeRO-1 falls out: moments inherit the param specs).
+  * kv heads / odd dims   — sharded over "model" only when divisible
+    (qwen kv=2, rg-lru kv=1 stay replicated; gemma2 kv=16 shards).
+  * decode caches         — batch over dp when divisible (long_500k B=1
+    stays replicated: single-stream latency is not data-parallel).
+
+All rules are name+shape driven so they apply to every architecture's
+params pytree without per-arch tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Logical roles of mesh axes. dp: batch+fsdp axes; tp: tensor axis."""
+    dp: Tuple[str, ...] = ("data",)
+    tp: str = "model"
+
+    def dp_size(self, mesh) -> int:
+        n = 1
+        for a in self.dp:
+            n *= mesh.shape[a]
+        return n
+
+    def tp_size(self, mesh) -> int:
+        return mesh.shape[self.tp]
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _axis_if(dim: int, axis, mesh) -> Optional[Any]:
+    """axis (str or tuple) if it divides dim, else None (replicated)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        if not axis:
+            return None
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return axis if _div(dim, n) else None
+    return axis if _div(dim, mesh.shape[axis]) else None
+
+
+def _rule(names: Tuple[str, ...], shape: Tuple[int, ...], mesh,
+          axes: MeshAxes, fsdp: bool) -> P:
+    """PartitionSpec for one param leaf, identified by its key path."""
+    name = names[-1]
+    layered = "segments" in names or "enc_segments" in names
+    lead: Tuple = (None,) if layered else ()
+    body = shape[1:] if layered else shape
+    tp, dpx = axes.tp, (axes.dp if fsdp else None)
+
+    def spec(*parts):
+        return P(*(lead + parts))
+
+    # ---- scalars / vectors that stay replicated
+    if name in ("scale", "b_a", "b_i", "lambda_p", "dt_bias", "A_log",
+                "D_skip", "b"):
+        return spec(*([None] * len(body)))
+    if name == "norm_scale":                        # (I,) — tp if divisible
+        return spec(_axis_if(body[0], tp, mesh))
+
+    in_moe = "moe" in names
+    in_conv = "conv" in names
+
+    if in_conv and name == "w":                     # (width, C)
+        return spec(None, _axis_if(body[1], tp, mesh))
+
+    if name == "embed":                             # (V, D) vocab-sharded
+        return spec(_axis_if(body[0], tp, mesh), None)
+    if name == "pos_embed":                         # (Pmax, D)
+        return spec(None, _axis_if(body[1], tp, mesh))
+    if name == "unembed":                           # (D, V)
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh))
+    if name == "frontend_proj":                     # (D, D)
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh))
+
+    if name == "wq":                                # (D, H, hd)
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh), None)
+    if name in ("wk", "wv"):                        # (D, KV, hd)
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh), None)
+    if name == "wo":                                # (H, hd, D)
+        return spec(_axis_if(body[0], tp, mesh), None,
+                    _axis_if(body[2], dpx, mesh))
+    if name in ("bq", "bk", "bv"):                  # (H, hd)
+        return spec(_axis_if(body[0], tp, mesh), None)
+
+    if in_moe:
+        if name == "router":                        # (D, E)
+            return spec(_axis_if(body[0], dpx, mesh), None)
+        if name in ("w_in", "w_gate"):              # (E, D, F) — EP over tp
+            return spec(_axis_if(body[0], tp, mesh),
+                        _axis_if(body[1], dpx, mesh), None)
+        if name == "w_out":                         # (E, F, D)
+            return spec(_axis_if(body[0], tp, mesh), None,
+                        _axis_if(body[2], dpx, mesh))
+
+    if name in ("w_in", "w_gate", "w_zx", "w_bc", "w_branch_gate"):
+        # (D, F)-shaped input projections: contract dim fsdp, out dim tp
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh))
+    if name == "w_dt":                              # (D, H) H rarely divides
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh))
+    if name in ("w_a", "w_i"):                      # (W, W)
+        return spec(_axis_if(body[0], dpx, mesh),
+                    _axis_if(body[1], tp, mesh))
+    if name == "w_out":                             # (F, D)
+        return spec(_axis_if(body[0], tp, mesh),
+                    _axis_if(body[1], dpx, mesh))
+
+    # fallback: replicate
+    return spec(*([None] * len(body)))
+
+
+def param_specs(cfg: ModelConfig, params_shapes, mesh, axes: MeshAxes,
+                *, fsdp: bool = True):
+    """PartitionSpec tree matching a params pytree (of arrays or
+    ShapeDtypeStructs). fsdp=False keeps weights TP-only (serving)."""
+
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        return _rule(names, tuple(leaf.shape), mesh, axes, fsdp)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def batch_specs(batch_shapes, mesh, axes: MeshAxes):
+    """Shard dim 0 (global batch) over dp where divisible; scalars and
+    indivisible batches replicate."""
+
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        b = leaf.shape[0]
+        ax = _axis_if(b, axes.dp, mesh)
+        return P(*((ax,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_specs(cache_shapes, mesh, axes: MeshAxes):
+    """Decode caches are (L, B, ...): batch over dp, kv heads over tp when
+    divisible (dim 3 of attention caches)."""
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        parts = [None] * nd
+        if nd >= 2:
+            parts[1] = _axis_if(leaf.shape[1], axes.dp, mesh)
+        if nd == 5:  # (L, B, S, KV, hd) attention cache
+            parts[3] = _axis_if(leaf.shape[3], axes.tp, mesh)
+        return P(*parts)
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def with_sharding(shapes_tree, specs_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+
+    def one(s, p):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, p))
+
+    return jax.tree.map(one, shapes_tree, specs_tree)
+
+
+def spec_tree_for_optstate(param_spec_tree, opt_shapes):
+    """Optimizer state specs: step replicated; moments inherit param specs
+    (=> ZeRO: moments are dp+tp sharded exactly like the weights)."""
+    from repro.optim.optimizers import OptState
+
+    mu = opt_shapes.mu and param_spec_tree
+    nu = opt_shapes.nu and param_spec_tree
+    return OptState(step=P(), mu=mu, nu=nu)

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import StragglerWatchdog, TrainLoop, TrainState
+
+__all__ = ["TrainLoop", "TrainState", "StragglerWatchdog"]

@@ -1,0 +1,159 @@
+"""Property-based tests (hypothesis) on the core invariants: tensor-id
+dedup, adaptive-offloading feasibility/maximality, memory accounting."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings as hsettings, strategies as st
+
+from repro.core.accounting import MemoryTracker
+from repro.core.adaptive import (ModuleProfile, plan_offload,
+                                 required_bandwidth)
+from repro.core.ids import TensorIdRegistry, _buffer_key
+
+# ------------------------------------------------------------- ids
+
+
+def test_ids_dedup_same_buffer():
+    reg = TensorIdRegistry()
+    a = np.ones((64, 64), np.float32)
+    t1, dup1 = reg.acquire(a)
+    t2, dup2 = reg.acquire(a)
+    assert not dup1 and dup2 and t1 == t2
+    reg.release(a)
+    reg.release(a)
+    assert reg.live_count == 0
+
+
+def test_ids_distinct_buffers_not_deduped():
+    reg = TensorIdRegistry()
+    a = np.ones((8, 8), np.float32)
+    b = np.ones((8, 8), np.float32)
+    ta, da = reg.acquire(a)
+    tb, db = reg.acquire(b)
+    assert not da and not db and ta != tb
+
+
+def test_ids_key_recycling_after_release():
+    """The paper's id() pitfall: addresses recycle after free. Releasing
+    must allow a new tensor at the same address to get a fresh id."""
+    reg = TensorIdRegistry()
+    a = np.ones((4, 4), np.float32)
+    key = _buffer_key(a)
+    t1, _ = reg.acquire(a)
+    reg.release_key(key)
+    t2, dup = reg.acquire(a)   # same buffer, new lease
+    assert not dup and t2 != t1
+
+
+def test_ids_parameters_excluded():
+    reg = TensorIdRegistry()
+    p = np.zeros((16,), np.float32)
+    reg.register_parameters({"w": p})
+    assert reg.is_parameter(p)
+    assert not reg.is_parameter(np.zeros((16,), np.float32))
+
+
+def test_ids_thread_safety():
+    reg = TensorIdRegistry()
+    arrs = [np.zeros((4,), np.float32) for _ in range(32)]
+
+    def worker():
+        for a in arrs:
+            reg.acquire(a)
+        for a in arrs:
+            reg.release(a)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.live_count == 0
+
+
+# --------------------------------------------------------- adaptive
+
+profiles_st = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=10**9),
+              st.floats(min_value=1e-4, max_value=10.0)),
+    min_size=2, max_size=24).map(
+        lambda ls: [ModuleProfile(f"m{i}", b, t)
+                    for i, (b, t) in enumerate(ls)])
+
+
+@hsettings(max_examples=200, deadline=None)
+@given(profiles_st, st.floats(min_value=1.0, max_value=1e12))
+def test_adaptive_plan_is_feasible_and_maximal(profiles, bw):
+    plan = plan_offload(profiles, bw)
+    m = plan.last_offloaded
+    if m >= 0:
+        # feasible: chosen prefix fits the measured bandwidth
+        assert required_bandwidth(profiles, m) <= bw * (1 + 1e-9)
+    # maximal: offloading one more module would exceed the bandwidth
+    # (or hit the keep-last-module rule)
+    nxt = m + 1
+    if nxt <= len(profiles) - 2:
+        assert required_bandwidth(profiles, nxt) > bw * (1 - 1e-9)
+
+
+@hsettings(max_examples=100, deadline=None)
+@given(profiles_st, st.floats(min_value=1.0, max_value=1e10),
+       st.floats(min_value=1.1, max_value=100.0))
+def test_adaptive_monotone_in_bandwidth(profiles, bw, factor):
+    lo = plan_offload(profiles, bw)
+    hi = plan_offload(profiles, bw * factor)
+    assert hi.last_offloaded >= lo.last_offloaded
+    assert hi.num_offloaded >= lo.num_offloaded
+
+
+@hsettings(max_examples=100, deadline=None)
+@given(profiles_st, st.floats(min_value=1.0, max_value=1e12))
+def test_adaptive_prefix_structure(profiles, bw):
+    """The plan is always a prefix: offload[i] implies offload[j<=i]."""
+    plan = plan_offload(profiles, bw)
+    seen_false = False
+    for o in plan.offload:
+        if not o:
+            seen_false = True
+        assert not (o and seen_false)
+
+
+def test_adaptive_keeps_last_module():
+    profiles = [ModuleProfile(f"m{i}", 10**6, 0.1) for i in range(5)]
+    plan = plan_offload(profiles, float("inf"))
+    assert not plan.offload[-1]
+    assert plan.last_offloaded == len(profiles) - 2
+
+
+# ------------------------------------------------------- accounting
+
+
+@hsettings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 31),
+                          st.integers(min_value=1, max_value=10**6)),
+                min_size=1, max_size=64))
+def test_tracker_peak_and_total(events):
+    tr = MemoryTracker()
+    live = {}
+    peak = 0
+    for key, nbytes in events:
+        if key in live:
+            tr.free(key)
+            live.pop(key)
+        else:
+            tr.alloc(key, nbytes)
+            live[key] = nbytes
+        peak = max(peak, sum(live.values()))
+        assert tr.current == sum(live.values())
+    assert tr.peak == peak
+
+
+def test_tracker_double_alloc_is_idempotent():
+    tr = MemoryTracker()
+    tr.alloc("k", 100)
+    tr.alloc("k", 999)       # ignored
+    assert tr.current == 100
+    tr.free("k")
+    tr.free("k")             # ignored
+    assert tr.current == 0

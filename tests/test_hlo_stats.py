@@ -1,0 +1,93 @@
+"""Unit tests for the trip-count-aware HLO analyzer (the roofline's data
+source): synthetic-text parsing plus an end-to-end check on a compiled
+scan where the expected dot FLOPs are known analytically."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import (analyze_hlo, parse_module,
+                                    _multipliers, _shape_bytes)
+
+SYNTH = """\
+HloModule test, entry_computation_layout={(f32[8,16])->f32[]}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[8,32]{1,0} all-gather(%x), replica_groups=[2,2]<=[4], dimensions={1}
+  %w = f32[32,16]{1,0} parameter(1)
+  %d = f32[8,16]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %d)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%z, %a)
+  %w = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body
+  %x1 = f32[8,16]{1,0} get-tuple-element(%w), index=1
+  ROOT %ar = f32[] all-reduce(%x1), replica_groups={{0,1,2,3}}, to_apply=%cond
+}
+"""
+
+
+def test_parse_computations_and_entry():
+    comps, by_name, entry = parse_module(SYNTH)
+    assert entry == "main"
+    assert set(comps) == {"body", "cond", "main"}
+
+
+def test_trip_count_multiplies_loop_body():
+    ana = analyze_hlo(SYNTH, total_devices=4)
+    # dot: 2 * 8*16 * 32 flops, x5 trips
+    assert ana.flops == pytest.approx(2 * 8 * 16 * 32 * 5)
+    assert ana.dot_count == 5
+
+
+def test_collectives_with_groups_and_trips():
+    ana = analyze_hlo(SYNTH, total_devices=4)
+    ag = ana.collectives["all-gather"]
+    # result 8*32*4 bytes, group size 2, wire = R*(n-1)/n, x5 trips
+    assert ag.count == 5
+    assert ag.wire_bytes == pytest.approx(8 * 32 * 4 * 0.5 * 5)
+    ar = ana.collectives["all-reduce"]
+    # explicit group {0,1,2,3}: n=4; all-reduce wire = 2R(n-1)/n; f32[] = 4B
+    assert ar.count == 1
+    assert ar.wire_bytes == pytest.approx(4 * 2 * 3 / 4)
+
+
+def test_shape_bytes_tuple_and_layout():
+    assert _shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert _shape_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert _shape_bytes("bf16[3,5]") == 30
+
+
+def test_end_to_end_scan_flops_counted():
+    """Compile a real scan and verify trip-aware dot FLOPs."""
+    L, D = 6, 32
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y.sum()
+
+    co = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((4, D), jnp.float32),
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32)).compile()
+    ana = analyze_hlo(co.as_text(), total_devices=1)
+    want = 2 * 4 * D * D * L
+    assert ana.flops == pytest.approx(want, rel=0.01)
+    # XLA's own cost_analysis counts the body once — our whole reason for
+    # existing; confirm the discrepancy is real.
+    xla_flops = co.cost_analysis().get("flops", 0)
+    assert xla_flops < want / 2

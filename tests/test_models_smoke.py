@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+and one train step on CPU, asserting output shapes and no NaNs (deliverable
+f). Also exercises prefill->decode consistency for decoder archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import RunSettings, build_model
+
+SETTINGS = RunSettings(attn_impl="xla", attn_chunk=8, param_dtype="float32")
+
+
+def _reduced(arch):
+    import dataclasses
+    cfg = reduced(get_config(arch))
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def _batch(cfg, B=2, S=16, rng=None):
+    rng = rng or np.random.default_rng(0)
+    batch = {}
+    if cfg.input_kind == "embeddings":
+        batch["embeddings"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.family == "vlm":
+        batch["enc_embeddings"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq_len, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "encdec":
+        batch["enc_tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nans(arch):
+    cfg = _reduced(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits, aux = jax.jit(
+        lambda p, b: api.forward(p, b, SETTINGS))(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits[..., :cfg.vocab_size])).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_loss(arch):
+    cfg = _reduced(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(1))
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        (l, m), g = jax.value_and_grad(
+            lambda p: api.loss(p, b, SETTINGS), has_aux=True)(p)
+        p = jax.tree.map(lambda w, gw: w - 0.05 * gw.astype(w.dtype), p, g)
+        return l, p
+
+    l0, params = step(params, batch)
+    assert np.isfinite(float(l0))
+    for _ in range(3):
+        l1, params = step(params, batch)
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0)  # same-batch loss must drop
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).has_decode])
+def test_prefill_decode_consistency(arch):
+    """Decoding token t with the prefill cache must match the full-sequence
+    forward logits at position t (the core serving invariant)."""
+    cfg = _reduced(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(2))
+    B, S = 2, 16
+    batch = _batch(cfg, B=B, S=S)
+
+    logits_full, _ = api.forward(params, batch, SETTINGS)
+    pre_batch = jax.tree.map(
+        lambda a: a[:, :S - 1] if a.ndim >= 2 and a.shape[1] == S else a,
+        {k: v for k, v in batch.items() if k != "labels"})
+    if cfg.family == "vlm":
+        pre_batch["enc_embeddings"] = batch["enc_embeddings"]
+    last_logits, caches = api.prefill(params, pre_batch, SETTINGS,
+                                      cache_len=S)
+    np.testing.assert_allclose(np.asarray(last_logits[:, 0]),
+                               np.asarray(logits_full[:, S - 2]),
+                               rtol=2e-4, atol=2e-4)
+
+    # one decode step for the final token
+    step_batch = ({"tokens": batch["tokens"][:, S - 1:]}
+                  if "tokens" in batch else
+                  {"embeddings": batch["embeddings"][:, S - 1:]})
+    # decode caches must be padded to a power-of-two-ish ring; reduced
+    # configs keep S small so the prefill cache length S-1 works directly.
+    logits_dec, _ = api.decode_step(params, caches, step_batch,
+                                    jnp.asarray(S - 1, jnp.int32), SETTINGS)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(logits_full[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,162 @@
+"""Multi-device tests (8 forced host devices, one subprocess — tests and
+benches must see 1 device in-process, per the dry-run contract).
+
+Checks inside the subprocess:
+  1. DP x TP sharded loss == single-device loss (GSPMD correctness);
+  2. MoE expert-parallel shard_map path == local path;
+  3. GPipe pipeline (shard_map + ppermute) fwd and grads == sequential;
+  4. int8 error-feedback compressed gradient mean ~= exact psum mean,
+     with error feedback shrinking the *accumulated* bias;
+  5. the dry-run's make_train_step compiles on an (2,4) mesh (regression
+     for the offload-policy/SPMD interplay).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeConfig
+from repro.models.api import build_model
+from repro.models.transformer import RunSettings
+from repro.models.moe import MoESettings, apply_moe, init_moe
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import make_step
+from repro.parallel.sharding import MeshAxes, param_specs, with_sharding
+from repro.parallel.pipeline import pipeline_apply, pipeline_loss_fn
+from repro.parallel.compress import (compressed_mean_grads,
+                                     exact_mean_grads, init_error_state)
+from repro.optim.optimizers import adamw
+
+assert jax.device_count() == 8
+mesh = make_test_mesh((2, 4), ("data", "model"))
+axes = MeshAxes(dp=("data",), tp="model")
+
+# ---------------- 1. DP x TP loss equivalence ----------------
+cfg = dataclasses.replace(
+    reduced(get_config("qwen2.5-3b"), layers=2, d_model=64, heads=4,
+            d_ff=128, vocab=512), dtype="float32")
+api = build_model(cfg)
+params = api.init(jax.random.key(0))
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, 512, (8, 32)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, 512, (8, 32)), jnp.int32)}
+
+plain = RunSettings(attn_impl="xla", attn_chunk=32, param_dtype="float32")
+loss_1dev, _ = jax.jit(lambda p, b: api.loss(p, b, plain))(params, batch)
+
+specs = param_specs(cfg, params, mesh, axes)
+p_sh = jax.device_put(params, jax.tree.map(
+    lambda s: NamedSharding(mesh, s), specs,
+    is_leaf=lambda x: isinstance(x, P)))
+b_sh = jax.device_put(batch, NamedSharding(mesh, P("data", None)))
+dist = RunSettings(attn_impl="xla", attn_chunk=32, param_dtype="float32",
+                   mesh=mesh, tp_axis="model", dp_axes=("data",))
+with mesh:
+    loss_8dev, _ = jax.jit(lambda p, b: api.loss(p, b, dist))(p_sh, b_sh)
+np.testing.assert_allclose(float(loss_1dev), float(loss_8dev),
+                           rtol=1e-4, atol=1e-5)
+print("PASS dp_tp_loss")
+
+# ---------------- 2. MoE EP == local ----------------
+D, F, E, K = 32, 64, 8, 2
+moe_p = init_moe(jax.random.key(1), D, F, E, jnp.float32)
+x = jnp.asarray(rng.normal(size=(8, 16, D)), jnp.float32)
+ms = MoESettings(E, K, capacity_factor=8.0)       # no drops either path
+y_local, aux_l = apply_moe(moe_p, x, ms)
+x_sh = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+with mesh:
+    y_ep, aux_e = jax.jit(lambda p, x: apply_moe(
+        p, x, ms, mesh=mesh, ep_axis="model", dp_axes=("data",)))(
+        moe_p, x_sh)
+np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_ep),
+                           rtol=2e-4, atol=2e-5)
+print("PASS moe_ep")
+
+# ---------------- 3. pipeline == sequential ----------------
+pmesh = make_test_mesh((4,), ("pipe",))
+S_, M, mb, Dp = 4, 8, 2, 16
+ws = jnp.asarray(rng.normal(size=(S_, Dp, Dp)) * 0.3, jnp.float32)
+
+def stage_fn(w, x):
+    return jnp.tanh(x @ w)
+
+x_mb = jnp.asarray(rng.normal(size=(M, mb, Dp)), jnp.float32)
+with pmesh:
+    y_pipe = pipeline_apply(stage_fn, ws, x_mb, pmesh)
+y_seq = x_mb
+for s in range(S_):
+    y_seq = jnp.tanh(y_seq @ ws[s])
+np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(y_seq),
+                           rtol=1e-5, atol=1e-5)
+
+loss_fn = pipeline_loss_fn(stage_fn, lambda y, aux: jnp.sum(y * aux),
+                           pmesh)
+aux = jnp.ones_like(x_mb)
+with pmesh:
+    g_pipe = jax.jit(jax.grad(loss_fn))(ws, x_mb, aux)
+def seq_loss(ws, x_mb, aux):
+    y = x_mb
+    for s in range(S_):
+        y = jnp.tanh(y @ ws[s])
+    return jnp.sum(y * aux)
+g_seq = jax.grad(seq_loss)(ws, x_mb, aux)
+np.testing.assert_allclose(np.asarray(g_pipe), np.asarray(g_seq),
+                           rtol=1e-4, atol=1e-5)
+print("PASS pipeline")
+
+# ---------------- 4. compressed gradient mean ----------------
+gmesh = make_test_mesh((8,), ("data",))
+grads = {"w": jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)}
+err = init_error_state(grads)
+with gmesh:
+    exact = exact_mean_grads(grads, gmesh, "data")
+    comp, err1 = compressed_mean_grads(grads, err, gmesh, "data")
+rel = float(jnp.abs(comp["w"] - exact["w"]).max()
+            / jnp.abs(exact["w"]).max())
+assert rel < 0.05, rel
+# error feedback: same grads repeatedly -> the accumulated mean of the
+# compressed estimates converges to the exact mean
+acc = jnp.zeros_like(exact["w"])
+e = init_error_state(grads)
+N = 16
+for _ in range(N):
+    with gmesh:
+        c, e = compressed_mean_grads(grads, e, gmesh, "data")
+    acc = acc + c["w"] / N
+rel_acc = float(jnp.abs(acc - exact["w"]).max()
+                / jnp.abs(exact["w"]).max())
+assert rel_acc < rel, (rel_acc, rel)
+print("PASS compress")
+
+# ---------------- 5. train-step compiles with offload policy ----------
+bundle = make_step(api, mesh, axes, ShapeConfig("t", 32, 8, "train"),
+                   optimizer=adamw(), activation_policy="offload")
+with mesh:
+    co = jax.jit(bundle.fn, out_shardings=bundle.out_shardings).lower(
+        *bundle.args).compile()
+assert co.memory_analysis() is not None
+print("PASS dryrun_step")
+print("ALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    for marker in ("PASS dp_tp_loss", "PASS moe_ep", "PASS pipeline",
+                   "PASS compress", "PASS dryrun_step", "ALL_OK"):
+        assert marker in r.stdout, (marker, r.stdout, r.stderr[-2000:])

@@ -1,0 +1,100 @@
+"""Sharding-rule unit tests (mesh mocked: the rules only read
+mesh.shape), verifying divisibility guards and per-name layouts for every
+architecture's parameter tree."""
+from types import SimpleNamespace
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.api import build_model
+from repro.parallel.sharding import (MeshAxes, batch_specs, cache_specs,
+                                     param_specs)
+
+MESH = SimpleNamespace(shape={"data": 16, "model": 16})
+MESH3 = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+AXES = MeshAxes(dp=("data",), tp="model")
+AXES3 = MeshAxes(dp=("pod", "data"), tp="model")
+
+
+def _params_sds(arch):
+    api = build_model(get_config(arch))
+    return jax.eval_shape(api.init, jax.random.key(0))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_tree_matches_and_divides(arch):
+    sds = _params_sds(arch)
+    specs = param_specs(get_config(arch), sds, MESH, AXES)
+    assert jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, sds)) == jax.tree_util.tree_structure(
+        jax.tree.map(lambda _: 0, specs,
+                     is_leaf=lambda x: isinstance(x, P)))
+
+    flat_s = jax.tree.leaves(sds)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_s, flat_p):
+        assert len(spec) <= len(leaf.shape)
+        for dim, part in zip(leaf.shape, tuple(spec)):
+            if part is None:
+                continue
+            parts = part if isinstance(part, tuple) else (part,)
+            n = 1
+            for a in parts:
+                n *= MESH.shape[a]
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+
+def test_qwen_kv_heads_replicated():
+    """kv=2 cannot shard over model=16 — must be None."""
+    cfg = get_config("qwen2.5-3b")
+    sds = _params_sds("qwen2.5-3b")
+    specs = param_specs(cfg, sds, MESH, AXES)
+    wk = specs["segments"][0]["b0"]["attn"]["wk"]
+    assert tuple(wk) == (None, "data", None, None)
+    wq = specs["segments"][0]["b0"]["attn"]["wq"]
+    assert tuple(wq) == (None, "data", "model", None)
+
+
+def test_moe_experts_on_model_axis():
+    cfg = get_config("kimi-k2-1t-a32b")
+    sds = _params_sds("kimi-k2-1t-a32b")
+    specs = param_specs(cfg, sds, MESH3, AXES3)
+    w_in = specs["segments"][1]["b0"]["moe"]["w_in"]
+    assert tuple(w_in)[:2] == (None, "model")       # experts over tp
+
+
+def test_serving_tp_only_drops_fsdp():
+    cfg = get_config("qwen2.5-3b")
+    sds = _params_sds("qwen2.5-3b")
+    specs = param_specs(cfg, sds, MESH, AXES, fsdp=False)
+    for leaf in jax.tree.leaves(specs,
+                                is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in str(leaf)
+
+
+def test_batch_specs_divisibility():
+    class SDS:
+        def __init__(self, shape):
+            self.shape = shape
+    b = {"tokens": SDS((256, 4096)), "pos": SDS(())}
+    specs = batch_specs(b, MESH3, AXES3)
+    assert tuple(specs["tokens"]) == (("pod", "data"), None)
+    assert tuple(specs["pos"]) == ()
+    b1 = {"tokens": SDS((1, 512))}                 # B=1: replicate
+    assert tuple(batch_specs(b1, MESH3, AXES3)["tokens"]) == (None, None)
+
+
+def test_cache_specs_kv_or_seq():
+    class SDS:
+        def __init__(self, shape):
+            self.shape = shape
+    # (L, B, S, KV, hd): kv=16 divisible -> sharded over model
+    c = SDS((46, 128, 4096, 16, 128))
+    spec = cache_specs(c, MESH3, AXES3)
+    assert tuple(spec)[1] == ("pod", "data") and tuple(spec)[3] == "model"
+    # kv=2 not divisible -> replicated heads
+    c2 = SDS((36, 128, 32768, 2, 128))
+    spec2 = cache_specs(c2, MESH3, AXES3)
+    assert tuple(spec2)[3] is None

@@ -1,0 +1,150 @@
+"""Unit tests for the ActivationSpool: async store/load roundtrip, tensor
+forwarding, dedup, store cancellation, the wait_io barrier, and the
+simulated-bandwidth mode used by the ROK sweeps."""
+import os
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spool import ActivationSpool
+
+
+def _spool(**kw):
+    d = tempfile.mkdtemp(prefix="spool_test_")
+    kw.setdefault("min_offload_elements", 16)
+    return ActivationSpool(d, **kw), d
+
+
+def _tree(seed=0, n=3, shape=(64, 64)):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=shape), jnp.float32)
+            for _ in range(n)]
+
+
+def test_roundtrip_exact():
+    spool, d = _spool()
+    tree = _tree()
+    spool.offload("k0", tree)
+    spool.wait_io()
+    out = spool.fetch("k0")
+    for a, b in zip(tree, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.drop("k0")
+    assert not os.path.exists(os.path.join(d, "k0.act"))
+    spool.close()
+
+
+def test_bf16_roundtrip():
+    spool, _ = _spool()
+    tree = [jnp.ones((32, 32), jnp.bfloat16) * 1.5]
+    spool.offload("k", tree)
+    spool.wait_io()
+    out = spool.fetch("k")
+    assert out[0].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out[0], np.float32),
+                                  np.asarray(tree[0], np.float32))
+    spool.close()
+
+
+def test_forwarding_when_store_in_flight():
+    """fetch() during a slow store must forward the in-memory reference
+    (paper §3.3.2) and cancel queued writes (§3.3.3 feature 1)."""
+    spool, _ = _spool(bandwidth_limit=1e6, store_threads=1)  # ~1 MB/s
+    t1 = _tree(1)
+    t2 = _tree(2)
+    spool.offload("a", t1)          # occupies the single store thread
+    spool.offload("b", t2)          # waits in queue
+    out = spool.fetch("b")          # must forward, not wait for disk
+    for a, b in zip(t2, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert spool.stats.bytes_forwarded > 0
+    assert spool.stats.stores_canceled >= 1
+    spool.wait_io()
+    spool.close()
+
+
+def test_dedup_same_buffer_written_once():
+    spool, _ = _spool()
+    x = jnp.ones((128, 128), jnp.float32)
+    spool.offload("k1", [x, x])     # same buffer twice
+    spool.wait_io()
+    assert spool.stats.bytes_deduped >= x.size * 4
+    out = spool.fetch("k1")
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(out[1]))
+    spool.close()
+
+
+def test_parameters_never_offloaded():
+    spool, _ = _spool()
+    p = jnp.ones((64, 64), jnp.float32)
+    spool.register_parameters({"w": p})
+    spool.offload("k", [p, jnp.zeros((64, 64), jnp.float32)])
+    spool.wait_io()
+    out = spool.fetch("k")
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(p))
+    spool.close()
+
+
+def test_small_tensors_stay_in_memory():
+    spool, _ = _spool(min_offload_elements=10**6)
+    t = _tree(shape=(8, 8))
+    spool.offload("k", t)
+    spool.wait_io()
+    assert spool.stats.bytes_offloaded == 0   # all below the threshold
+    out = spool.fetch("k")
+    for a, b in zip(t, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.close()
+
+
+def test_keep_then_fetch():
+    spool, _ = _spool()
+    t = _tree()
+    spool.keep("k", t)
+    out = spool.fetch("k")
+    for a, b in zip(t, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.drop("k")
+    assert spool.tracker.current == 0
+    spool.close()
+
+
+def test_prefetch_then_fetch():
+    spool, _ = _spool()
+    t = _tree()
+    spool.offload("k", t)
+    spool.wait_io()
+    spool.prefetch("k")
+    spool.wait_io()
+    out = spool.fetch("k")
+    for a, b in zip(t, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.close()
+
+
+def test_tracker_reflects_offload_lifecycle():
+    spool, _ = _spool()
+    t = _tree(shape=(256, 256))
+    nbytes = sum(x.size * 4 for x in t)
+    spool.offload("k", t)
+    spool.wait_io()                 # store done -> device bytes released
+    assert spool.tracker.current == 0
+    spool.fetch("k")                # reloaded -> resident again
+    assert spool.tracker.current == nbytes
+    spool.drop("k")
+    assert spool.tracker.current == 0
+    spool.close()
+
+
+def test_bandwidth_limit_enforced():
+    spool, _ = _spool(bandwidth_limit=2e6)
+    t = [jnp.ones((512, 512), jnp.float32)]   # 1 MB
+    t0 = time.perf_counter()
+    spool.offload("k", t)
+    spool.wait_io()
+    dt = time.perf_counter() - t0
+    assert dt >= 0.4, dt            # >= nbytes / bw
+    spool.close()
