@@ -1,0 +1,140 @@
+"""repro.io backend x codec sweep on a synthetic residual stream.
+
+Drives the ActivationSpool exactly the way the staged trainer does —
+offload a forward-ordered stream of residual trees, then fetch them in
+backward order with one-ahead prefetch — over every registered storage
+backend and codec. Reports measured backend write/read bandwidth, the
+fetch wait exposed to the (synthetic) backward pass, and the stored
+byte volume (the codec's WAF lever), and emits ``BENCH_io.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.spool import ActivationSpool
+from repro.io import (FilesystemBackend, HostMemoryBackend, StripedBackend,
+                      TieredBackend)
+
+# stream geometry: 8 "modules" x 3 residuals x 1 MiB float32
+N_KEYS = 8
+N_LEAVES = 3
+LEAF_SHAPE = (512, 512)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_io.json")
+
+BACKENDS = ["fs", "striped", "mem", "tiered"]
+CODECS = ["raw", "zlib"]
+
+
+def _make_backend(kind: str, root: str):
+    if kind == "fs":
+        return FilesystemBackend(os.path.join(root, "fs"))
+    if kind == "striped":
+        return StripedBackend([os.path.join(root, f"ssd{i}")
+                               for i in range(4)], chunk_bytes=1 << 18)
+    if kind == "mem":
+        return HostMemoryBackend()
+    if kind == "tiered":
+        # budget sized to hold about half the stream in RAM
+        stream = N_KEYS * N_LEAVES * int(np.prod(LEAF_SHAPE)) * 4
+        return TieredBackend(FilesystemBackend(os.path.join(root, "low")),
+                             capacity_bytes=stream // 2)
+    raise AssertionError(kind)
+
+
+def _residual_stream(seed: int = 0) -> Dict[str, List[np.ndarray]]:
+    """Half noise, half structured zeros — activations are compressible
+    but not trivially so."""
+    rng = np.random.default_rng(seed)
+    stream = {}
+    for k in range(N_KEYS):
+        leaves = []
+        for j in range(N_LEAVES):
+            a = rng.normal(size=LEAF_SHAPE).astype(np.float32)
+            a[::2] = 0.0
+            leaves.append(a)
+        stream[f"mb0_s{k}"] = leaves
+    return stream
+
+
+def run_one(kind: str, codec: str) -> Dict:
+    root = tempfile.mkdtemp(prefix=f"bench_io_{kind}_")
+    backend = _make_backend(kind, root)
+    spool = ActivationSpool(backend, codec=codec,
+                            min_offload_elements=16)
+    stream = _residual_stream()
+    logical = sum(a.nbytes for ls in stream.values() for a in ls)
+
+    t0 = time.perf_counter()
+    for key, leaves in stream.items():      # forward: async stores
+        spool.offload(key, leaves)
+    spool.wait_io()
+    t_store = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    keys = list(stream)
+    for i in range(len(keys) - 1, -1, -1):  # backward walk
+        if i > 0:
+            spool.prefetch(keys[i - 1])     # one-ahead (§3.3.2)
+        out = spool.fetch(keys[i])
+        assert len(out) == N_LEAVES
+        spool.drop(keys[i])
+    t_fetch = time.perf_counter() - t0
+    io = backend.stats
+    rec = {
+        "backend": kind, "codec": codec,
+        "logical_mb": round(logical / 1e6, 2),
+        "stored_mb": round(io.bytes_written / 1e6, 2),
+        "compress_ratio": round(logical / io.bytes_written, 3)
+        if io.bytes_written else None,
+        "store_wall_s": round(t_store, 4),
+        "fetch_wall_s": round(t_fetch, 4),
+        "write_gb_s": round(io.write_bandwidth / 1e9, 3)
+        if io.write_time else None,
+        "read_gb_s": round(io.read_bandwidth / 1e9, 3)
+        if io.read_time else None,
+        "fetch_wait_s": round(spool.stats.fetch_wait_time, 4),
+        "tiers": [
+            {"name": t.name,
+             "write_gb_s": (round(t.write_bw / 1e9, 3)
+                            if t.write_bw != float("inf") else None),
+             "capacity_bytes": t.capacity_bytes}
+            for t in backend.tier_bandwidths()],
+    }
+    if isinstance(backend, StripedBackend):
+        rec["per_device_write_mb"] = [round(b / 1e6, 2)
+                                      for b in
+                                      backend.per_device_write_bytes()]
+    if isinstance(backend, TieredBackend):
+        rec["evictions"] = backend.evictions
+        rec["bytes_evicted_mb"] = round(backend.bytes_evicted / 1e6, 2)
+    spool.close()
+    return rec
+
+
+def main():
+    rows = []
+    print("name,us_per_call,derived")
+    for kind in BACKENDS:
+        for codec in CODECS:
+            rec = run_one(kind, codec)
+            rows.append(rec)
+            total_us = (rec["store_wall_s"] + rec["fetch_wall_s"]) * 1e6
+            print(f"io/{kind}-{codec},{total_us:.0f},"
+                  f"write_gb_s={rec['write_gb_s']}"
+                  f";read_gb_s={rec['read_gb_s']}"
+                  f";fetch_wait_s={rec['fetch_wait_s']}"
+                  f";stored_mb={rec['stored_mb']}")
+    with open(OUT_PATH, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {OUT_PATH}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

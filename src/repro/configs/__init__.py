@@ -1,8 +1,9 @@
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, reduced
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig,
+                                SpoolIoConfig, reduced)
 from repro.configs.registry import (ARCH_IDS, cell_skip_reason, get_config,
                                     get_shape, grid)
 
 __all__ = [
-    "ModelConfig", "ShapeConfig", "SHAPES", "reduced",
+    "ModelConfig", "ShapeConfig", "SpoolIoConfig", "SHAPES", "reduced",
     "ARCH_IDS", "get_config", "get_shape", "grid", "cell_skip_reason",
 ]

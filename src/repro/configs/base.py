@@ -149,6 +149,38 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class SpoolIoConfig:
+    """Declarative selection of the activation spool's storage stack
+    (repro.io). Purely data — `repro.io.build_backend` turns it into a
+    `StorageBackend`, and `core.staged.StagedTrainer` threads it through
+    to the spool.
+
+    backend: "fs" (one directory / one SSD), "striped" (round-robin
+    chunks across `stripe_dirs`, a multi-SSD array), "mem" (host RAM),
+    or "tiered" (RAM under `host_mem_budget_bytes`, spilling to a lower
+    fs/striped backend)."""
+    backend: str = "fs"
+    directory: Optional[str] = None        # None -> fresh temp dir
+    stripe_dirs: Tuple[str, ...] = ()
+    stripe_chunk_bytes: int = 4 << 20
+    codec: str = "raw"                     # raw | zlib
+    host_mem_budget_bytes: int = 256 << 20
+    store_threads: int = 4
+    load_threads: int = 4
+    bandwidth_limit: Optional[float] = None
+
+    def validate(self) -> "SpoolIoConfig":
+        assert self.backend in ("fs", "striped", "mem", "tiered"), \
+            self.backend
+        assert self.stripe_chunk_bytes > 0
+        assert self.host_mem_budget_bytes >= 0
+        if self.backend == "striped":
+            assert len(self.stripe_dirs) != 1, \
+                "striping across one directory is just 'fs'"
+        return self
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     """One (input-shape) cell: training or serving geometry."""
     name: str

@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -242,3 +242,48 @@ def project(sys: SystemConfig, gpu: GpuSpec = GpuSpec(),
 
 def project_all() -> List[Projection]:
     return [project(s) for s in MEGATRON_SYSTEMS]
+
+
+# ------------------------------------------------- per-device wear (repro.io)
+
+@dataclass(frozen=True)
+class DeviceWear:
+    """Measured write load and projected lifespan of one SSD in a
+    striped array (repro.io.StripedBackend per-device accounting)."""
+    device: str
+    bytes_written: int
+    share: float                  # fraction of the array's total writes
+    write_gb_s: float             # sustained rate over the measured window
+    lifespan_years: float
+
+
+def project_device_lifespans(per_device_bytes: Sequence[int],
+                             elapsed_s: float, *,
+                             ssd: SsdSpec = SsdSpec(),
+                             devices_in_spec: int = 4,
+                             labels: Optional[Sequence[str]] = None) \
+        -> List[DeviceWear]:
+    """Fig. 9's lifespan projection, per physical drive.
+
+    The striped backend counts bytes per stripe directory; each
+    directory stands in for one SSD, so dividing the spec's array
+    endurance by `devices_in_spec` gives the per-drive budget. Lifespan
+    is endurance over the *measured sustained write rate* of that drive
+    — a skewed stripe layout shows up directly as one drive aging
+    faster than the array average."""
+    if elapsed_s <= 0:
+        raise ValueError("elapsed_s must be positive")
+    endurance_per_dev = (ssd.endurance_pbw * 1e15 / devices_in_spec
+                         * ssd.jesd_waf / ssd.our_waf)
+    total = sum(per_device_bytes)
+    out = []
+    for i, nbytes in enumerate(per_device_bytes):
+        label = labels[i] if labels else f"dev{i}"
+        rate = nbytes / elapsed_s
+        life_s = endurance_per_dev / rate if rate > 0 else float("inf")
+        out.append(DeviceWear(
+            device=label, bytes_written=int(nbytes),
+            share=(nbytes / total if total else 0.0),
+            write_gb_s=rate / 1e9,
+            lifespan_years=life_s / (365.25 * 24 * 3600)))
+    return out

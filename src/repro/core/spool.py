@@ -13,25 +13,31 @@ Two FIFO thread pools (store / load), exactly the paper's structure:
   * deduplication: arrays whose storage is already tracked (or registered as
     parameters) are recorded as aliases and not written twice (§3.3.1).
 
-The "SSD" here is a real directory written through a real filesystem; an
-optional bandwidth_limit simulates a slower tier for the ROK sweeps.
+The "SSD" behind the spool is a pluggable `repro.io.StorageBackend`:
+a real directory (default, the seed behavior), a striped multi-SSD
+array, a host-RAM tier, or a capacity-budgeted RAM-over-SSD hierarchy.
+Payloads go through a pluggable `Codec` (raw / zlib). An optional
+bandwidth_limit still simulates a slower tier for the ROK sweeps.
 """
 from __future__ import annotations
 
-import os
-import pickle
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
 import jax
 
 from repro.core.accounting import MemoryTracker
+from repro.core.adaptive import TierBandwidth
 from repro.core.ids import TensorIdRegistry, _buffer_key
+from repro.io import (Codec, FilesystemBackend, StorageBackend, get_codec,
+                      pack_parts, unpack)
+from repro.io.serde import (deserialize_leaves, serialize_leaves,
+                            serialize_parts)
 
 # job states
 QUEUED, RUNNING, DONE, CANCELED = range(4)
@@ -39,34 +45,21 @@ QUEUED, RUNNING, DONE, CANCELED = range(4)
 # paper Algorithm 2 line 12: tensors smaller than 2**20 elements stay put
 MIN_OFFLOAD_ELEMENTS = 2 ** 20
 
+# back-compat aliases for the serialization helpers that used to live here
+_serialize = serialize_leaves
+_deserialize = deserialize_leaves
+
 
 def _nbytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
-def _serialize(leaves: Sequence[np.ndarray]) -> bytes:
-    metas, blobs = [], []
-    for a in leaves:
-        a = np.asarray(a)
-        metas.append((a.shape, str(a.dtype)))
-        blobs.append(a.tobytes())
-    return pickle.dumps((metas, blobs), protocol=4)
-
-
-def _deserialize(data: bytes):
-    import ml_dtypes
-    metas, blobs = pickle.loads(data)
-    out = []
-    for (shape, dt), blob in zip(metas, blobs):
-        np_dt = np.dtype(getattr(ml_dtypes, dt, dt) if isinstance(dt, str)
-                         else dt)
-        out.append(np.frombuffer(blob, dtype=np_dt).reshape(shape))
-    return out
-
-
 @dataclass
 class SpoolStats:
     bytes_offloaded: int = 0
+    # pre-codec residual bytes behind bytes_offloaded — their ratio is
+    # the codec's measured compression on real activations
+    bytes_offloaded_logical: int = 0
     bytes_loaded: int = 0
     bytes_forwarded: int = 0
     bytes_deduped: int = 0
@@ -86,27 +79,36 @@ class SpoolStats:
 
 
 class _Job:
-    __slots__ = ("key", "arrays", "state", "cond", "path", "kind")
+    __slots__ = ("key", "arrays", "state", "cond", "kind", "orphaned",
+                 "error")
 
-    def __init__(self, key, arrays, path, kind):
+    def __init__(self, key, arrays, kind):
         self.key = key
         self.arrays = arrays
         self.state = QUEUED
         self.cond = threading.Condition()
-        self.path = path
         self.kind = kind  # "store" | "load"
+        self.orphaned = False  # dropped while the store was running
+        self.error = None      # exception raised by the worker, if any
 
 
 class ActivationSpool:
-    def __init__(self, directory: str, *, store_threads: int = 4,
+    def __init__(self, backend: Union[str, StorageBackend], *,
+                 store_threads: int = 4,
                  load_threads: int = 4,
+                 codec: Union[str, Codec, None] = None,
                  bandwidth_limit: Optional[float] = None,
                  tracker: Optional[MemoryTracker] = None,
                  registry: Optional[TensorIdRegistry] = None,
                  min_offload_elements: int = MIN_OFFLOAD_ELEMENTS):
-        self.dir = directory
+        # A bare directory string keeps the seed call shape:
+        # ActivationSpool("/path/to/dir") == filesystem backend there.
+        if isinstance(backend, str):
+            backend = FilesystemBackend(backend)
+        self.backend = backend
+        self.dir = getattr(backend, "directory", None)
+        self.codec = get_codec(codec)
         self.min_offload_elements = min_offload_elements
-        os.makedirs(directory, exist_ok=True)
         self.tracker = tracker or MemoryTracker()
         self.registry = registry or TensorIdRegistry()
         self.stats = SpoolStats()
@@ -175,8 +177,7 @@ class ActivationSpool:
                 }
             return
         self.tracker.alloc((key, "s"), nbytes, tag=f"residual:{key}")
-        path = os.path.join(self.dir, f"{key}.act")
-        job = _Job(key, spooled, path, "store")
+        job = _Job(key, spooled, "store")
         with self._lock:
             self._records[key] = {
                 "treedef": treedef, "keep": {i: leaves[i] for i in keep_idx},
@@ -212,7 +213,7 @@ class ActivationSpool:
                     return          # still in memory; forwarding will hit
             if rec["load_job"] is not None or rec["loaded"] is not None:
                 return
-            lj = _Job(key, None, job.path, "load")
+            lj = _Job(key, None, "load")
             rec["load_job"] = lj
         self._load_q.put(lj)
 
@@ -236,6 +237,12 @@ class ActivationSpool:
                         job.state = CANCELED
                         self.stats.stores_canceled += 1
                         # memory stays resident; keep tracker entry
+                elif job.error is not None and job.arrays is not None:
+                    # the store failed (e.g. ENOSPC) but the arrays are
+                    # still referenced — forward them rather than chase
+                    # a blob that was never written
+                    spooled = job.arrays
+                    self.stats.bytes_forwarded += _nbytes(spooled)
             if spooled is None:
                 with self._lock:
                     lj = rec["load_job"]
@@ -250,6 +257,9 @@ class ActivationSpool:
                             lj.cond.wait()
                     self.stats.fetch_wait_time += (time.perf_counter()
                                                    - t_wait)
+                    if lj.error is not None:
+                        raise RuntimeError(
+                            f"spool load failed for {key!r}") from lj.error
                 with self._lock:
                     spooled = rec["loaded"]
                 self.tracker.alloc((key, "s"), rec["nbytes"],
@@ -264,7 +274,8 @@ class ActivationSpool:
         return jax.tree.unflatten(rec["treedef"], leaves)
 
     def drop(self, key) -> None:
-        """Consume a record after backward: free memory + delete the file."""
+        """Consume a record after backward: free memory + delete the
+        blob from the backend."""
         with self._lock:
             rec = self._records.pop(key, None)
         if rec is None:
@@ -273,15 +284,94 @@ class ActivationSpool:
             self.registry.release_key(bkey)
         self.tracker.free((key, "s"), tag=f"consumed:{key}")
         self.tracker.free((key, "k"), tag=f"consumed:{key}")
-        try:
-            os.unlink(os.path.join(self.dir, f"{key}.act"))
-        except OSError:
-            pass
+        if not rec["spool_idx"]:
+            return
+        job = rec["job"]
+        if job is not None:
+            with job.cond:
+                if job.state == QUEUED:
+                    # never written; cancel so the worker skips the
+                    # (now pointless) write entirely
+                    job.state = CANCELED
+                    self.stats.stores_canceled += 1
+                    return
+                if job.state == RUNNING:
+                    # the write will land *after* this delete — flag the
+                    # job so the worker deletes on completion, or the
+                    # blob leaks forever (on a RAM backend that is a
+                    # real memory leak, not a stray file)
+                    job.orphaned = True
+                    return
+        self.backend.delete(str(key))
 
     def wait_io(self) -> None:
         """Barrier: wait for all queued stores (paper Algorithm 1 line 15)."""
         self._store_q.join()
         self._load_q.join()
+
+    def calibrate_backend(self, nbytes: int, repeats: int = 2) -> None:
+        """Re-measure the whole store path with a synthetic uncontended
+        burst.
+
+        The profiling step's writes race jit compilation for CPU, so the
+        busy-clock bandwidth they leave behind can understate the device
+        severalfold and make the planner underoffload. Call after
+        wait_io(). Two measurements:
+
+        * codec+container throughput and size ratio on an incompressible
+          payload (the worker encodes before it writes, so a slow codec
+          bounds the store path no matter how fast the device is);
+        * per-tier device bandwidth via backend.calibrate, which
+          exercises every tier of a composite backend.
+        """
+        if nbytes <= 0:
+            return
+        import os as _os
+        payload = _os.urandom(nbytes)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            data = pack_parts([payload], self.codec)
+        t_codec = (time.perf_counter() - t0) / repeats
+        self._codec_bw = nbytes / t_codec if t_codec > 0 else float("inf")
+        # Size ratio from *real* spooled residuals when available: the
+        # urandom probe is right for throughput (worst case) but wrong
+        # for ratio — activations compress, random bytes don't.
+        if self.stats.bytes_offloaded_logical > 0:
+            self._codec_ratio = (self.stats.bytes_offloaded
+                                 / self.stats.bytes_offloaded_logical)
+        else:
+            self._codec_ratio = len(data) / nbytes
+        self.backend.calibrate(data, repeats)
+
+    def planner_bandwidth(self) -> Union[float, List[TierBandwidth]]:
+        """What the adaptive planner should plan against.
+
+        Per-tier *store-path* bandwidths: the measured device rate of
+        each tier composed (harmonically — the worker encodes, then
+        writes) with the measured codec throughput, in logical residual
+        bytes. Tier capacities are converted to logical bytes via the
+        codec's size ratio. Falls back to the spool's own end-to-end
+        scalar while any tier is still unmeasured."""
+        tiers = self.backend.tier_bandwidths()
+        if not tiers or any(t.write_bw <= 0 or t.write_bw == float("inf")
+                            for t in tiers):
+            return self.stats.write_bandwidth
+        ratio = getattr(self, "_codec_ratio", 1.0)
+        codec_bw = getattr(self, "_codec_bw", float("inf"))
+        out = []
+        for t in tiers:
+            per_byte = ratio / t.write_bw + (1.0 / codec_bw
+                                             if codec_bw > 0 else 0.0)
+            bw = 1.0 / per_byte
+            if self._bw:
+                # the simulated-tier throttle (encoded bytes/s) caps
+                # every store job regardless of device speed; express
+                # it in logical bytes like the rest of the tier
+                bw = min(bw, self._bw / max(ratio, 1e-9))
+            cap = (None if t.capacity_bytes is None
+                   else int(t.capacity_bytes / max(ratio, 1e-9)))
+            out.append(TierBandwidth(t.name, bw, cap))
+        return out
 
     def close(self) -> None:
         self.wait_io()
@@ -289,6 +379,7 @@ class ActivationSpool:
         for _ in self._threads:
             self._store_q.put(None)
             self._load_q.put(None)
+        self.backend.close()
 
     # --------------------------------------------------------- workers
 
@@ -300,6 +391,13 @@ class ActivationSpool:
                 return
             try:
                 self._run_job(job)
+            except BaseException as e:
+                # keep the worker alive and surface the failure at
+                # fetch() instead of deadlocking a waiter forever
+                job.error = e
+                with job.cond:
+                    job.state = DONE
+                    job.cond.notify_all()
             finally:
                 q.task_done()
 
@@ -312,9 +410,8 @@ class ActivationSpool:
         t0 = time.perf_counter()
         if job.kind == "store":
             arrays = [np.asarray(a) for a in job.arrays]
-            data = _serialize(arrays)
-            with open(job.path, "wb") as f:
-                f.write(data)
+            data = pack_parts(serialize_parts(arrays), self.codec)
+            self.backend.write(str(job.key), data)
             dt = time.perf_counter() - t0
             if self._bw:
                 min_t = len(data) / self._bw
@@ -322,17 +419,29 @@ class ActivationSpool:
                     time.sleep(min_t - dt)
                     dt = min_t
             self.stats.bytes_offloaded += len(data)
+            self.stats.bytes_offloaded_logical += \
+                sum(a.nbytes for a in arrays)
             self.stats.store_time += dt
             self.stats.num_stores += 1
             with job.cond:
                 job.arrays = None          # drop the reference -> memory free
                 job.state = DONE
+                orphaned = job.orphaned
                 job.cond.notify_all()
             self.tracker.free((job.key, "s"), tag=f"offloaded:{job.key}")
+            if orphaned:
+                # Dropped while we were writing. Spool keys are reused
+                # across steps, so a NEW lease of this key may already
+                # exist — deleting then would destroy its blob (a new
+                # lease's write can only happen after its record is
+                # inserted under _lock, so checking and deleting under
+                # the same lock closes the race).
+                with self._lock:
+                    if job.key not in self._records:
+                        self.backend.delete(str(job.key))
         else:
-            with open(job.path, "rb") as f:
-                data = f.read()
-            arrays = _deserialize(data)
+            data = self.backend.read(str(job.key))
+            arrays = deserialize_leaves(unpack(data))
             dt = time.perf_counter() - t0
             if self._bw:
                 min_t = len(data) / self._bw

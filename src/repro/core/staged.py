@@ -110,7 +110,9 @@ class StagedTrainer:
     def __init__(self, api: ModelApi, settings: RunSettings, optimizer,
                  *, strategy: str = "offload",
                  spool_dir: Optional[str] = None,
-                 store_threads: int = 4, load_threads: int = 4,
+                 backend=None, io_config=None, codec: Optional[str] = None,
+                 store_threads: Optional[int] = None,
+                 load_threads: Optional[int] = None,
                  bandwidth_limit: Optional[float] = None,
                  adaptive: bool = True,
                  num_microbatches: int = 1,
@@ -125,9 +127,27 @@ class StagedTrainer:
         self.num_microbatches = num_microbatches
         self.tracker = MemoryTracker()
         from repro.core.spool import MIN_OFFLOAD_ELEMENTS
+        # Storage selection, most specific wins: an explicit
+        # repro.io.StorageBackend > a declarative SpoolIoConfig > the
+        # seed behavior (filesystem backend in spool_dir / a temp dir).
+        if backend is None and io_config is not None:
+            from repro.io import build_backend
+            io_config.validate()
+            backend = build_backend(io_config, default_dir=spool_dir)
+            # explicit constructor arguments win over the config
+            codec = io_config.codec if codec is None else codec
+            if store_threads is None:
+                store_threads = io_config.store_threads
+            if load_threads is None:
+                load_threads = io_config.load_threads
+            if bandwidth_limit is None:
+                bandwidth_limit = io_config.bandwidth_limit
+        if backend is None:
+            backend = spool_dir or tempfile.mkdtemp(prefix="tba_spool_")
         self.spool = ActivationSpool(
-            spool_dir or tempfile.mkdtemp(prefix="tba_spool_"),
-            store_threads=store_threads, load_threads=load_threads,
+            backend, codec=codec,
+            store_threads=(4 if store_threads is None else store_threads),
+            load_threads=(4 if load_threads is None else load_threads),
             bandwidth_limit=bandwidth_limit, tracker=self.tracker,
             min_offload_elements=(MIN_OFFLOAD_ELEMENTS
                                   if min_offload_elements is None
@@ -301,6 +321,18 @@ class StagedTrainer:
                     leaves = None
                 else:
                     out, leaves = stage.fwd(stage_params[si], *args)
+                    if self.adaptive and self.plan is None and mb == 0:
+                        # Profiling step: the first call of every stage
+                        # paid jit compilation, which inflates the
+                        # planner's deadline by orders of magnitude and
+                        # makes it overcommit the store path. Release
+                        # the cold call's buffers (so the footprint is
+                        # not transiently doubled), then re-run warm and
+                        # let `dt` below time that call.
+                        jax.block_until_ready(out)
+                        out = leaves = None
+                        tin = time.perf_counter()
+                        out, leaves = stage.fwd(stage_params[si], *args)
                 if stage.role == "head":
                     loss = out
                 elif stage.role in ("enc_embed", "enc_layer"):
@@ -398,8 +430,14 @@ class StagedTrainer:
 
         if self.adaptive and self.plan is None and self._step == 0:
             self._profiles = profiles
-            bw = self.spool.stats.write_bandwidth
-            self.plan = plan_offload(profiles, bw)
+            # Plan against the backend's measured per-tier bandwidths
+            # (a tiered/striped store is not one scalar). The profiling
+            # step's own writes raced jit compilation, so re-measure
+            # with an uncontended burst sized like the largest module.
+            max_bytes = max((p.bytes for p in profiles), default=0)
+            self.spool.calibrate_backend(min(max_bytes, 8 << 20))
+            self.plan = plan_offload(profiles,
+                                     self.spool.planner_bandwidth())
         self._step += 1
         return params, opt_state, StepReport(
             loss=loss_total / len(batches), step_time=step_time,

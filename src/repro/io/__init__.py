@@ -1,0 +1,35 @@
+"""repro.io — pluggable tiered storage backends for the activation spool.
+
+Layering (bottom up):
+
+  serde    arrays <-> bytes (writable on the way back)
+  codecs   bytes <-> bytes (raw / zlib), self-describing container
+  backend  StorageBackend interface + IoStats + registry
+  backends fs | striped | mem | tiered implementations
+  factory  SpoolIoConfig / spec-string -> backend construction
+
+`core/spool.py` composes these: serialize -> pack(codec) -> backend.write
+on the store path, and the inverse on load.
+"""
+from repro.io.backend import (BACKENDS, NOMINAL_WRITE_BW, IoStats,
+                              StorageBackend, get_backend_cls,
+                              register_backend)
+from repro.io.backends import (FilesystemBackend, HostMemoryBackend,
+                               StripedBackend, TieredBackend)
+from repro.io.codecs import (CODECS, Codec, RawCodec, ZlibCodec,
+                             get_codec, pack, pack_parts, register_codec,
+                             unpack)
+from repro.io.factory import backend_from_spec, build_backend, parse_bytes
+from repro.io.serde import (deserialize_leaves, serialize_leaves,
+                            serialize_parts)
+
+__all__ = [
+    "BACKENDS", "NOMINAL_WRITE_BW", "IoStats", "StorageBackend",
+    "get_backend_cls", "register_backend",
+    "FilesystemBackend", "HostMemoryBackend", "StripedBackend",
+    "TieredBackend",
+    "CODECS", "Codec", "RawCodec", "ZlibCodec", "get_codec", "pack",
+    "pack_parts", "register_codec", "unpack",
+    "backend_from_spec", "build_backend", "parse_bytes",
+    "deserialize_leaves", "serialize_leaves", "serialize_parts",
+]

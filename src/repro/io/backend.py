@@ -1,0 +1,219 @@
+"""Storage-backend interface for the activation spool (`repro.io`).
+
+The spool's I/O engine (core/spool.py) is backend-agnostic: it hands a
+`StorageBackend` opaque byte blobs under string keys and gets them back.
+Backends model the storage tiers of the paper's experimental setup and of
+the tiered-cache related work (10Cache, MemAscend):
+
+  * `FilesystemBackend` — one directory on one device (the seed behavior)
+  * `StripedBackend`    — round-robin chunk striping across N directories
+                          (the paper's multi-SSD array), with per-device
+                          write accounting for endurance projection
+  * `HostMemoryBackend` — CPU-RAM tier
+  * `TieredBackend`     — host-RAM first under a byte budget, spilling to
+                          a lower backend in backward-access order
+
+Every backend measures its own `IoStats` (bytes + wall time per
+direction), which the adaptive-offloading planner consumes as per-tier
+`TierBandwidth` entries instead of a single scalar.
+
+Backends are registered under string keys (`register_backend`) so config
+and CLI layers can select them declaratively (`build_backend`,
+`backend_from_spec`).
+"""
+from __future__ import annotations
+
+import abc
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Type
+
+from repro.core.adaptive import TierBandwidth
+
+# Nominal sequential-write bandwidths (bytes/s) per backend kind, used by
+# dry-run projections when no measurement exists yet. fs: one datacenter
+# NVMe; striped: the paper's 4x D7-P5810 array; mem/tiered: host DRAM
+# reached over PCIe 4.0 x16.
+NOMINAL_WRITE_BW: Dict[str, float] = {
+    "fs": 2.0e9,
+    "striped": 8.0e9,
+    "mem": 20.0e9,
+    "tiered": 20.0e9,
+}
+
+
+@dataclass
+class IoStats:
+    """Measured I/O volume and busy time for one backend (or one tier).
+
+    write_time / read_time are *utilization clocks*: time during which at
+    least one writer (reader) was inside the backend. Summing per-call
+    wall times would overstate time N-fold under N concurrent spool
+    threads and make measured bandwidth look N-fold worse than the
+    device's — the adaptive planner would then underoffload."""
+    bytes_written: int = 0
+    bytes_read: int = 0
+    write_time: float = 0.0
+    read_time: float = 0.0
+    num_writes: int = 0
+    num_reads: int = 0
+    num_deletes: int = 0
+
+    @property
+    def write_bandwidth(self) -> float:
+        return self.bytes_written / self.write_time \
+            if self.write_time else float("inf")
+
+    @property
+    def read_bandwidth(self) -> float:
+        return self.bytes_read / self.read_time \
+            if self.read_time else float("inf")
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "bytes_written": self.bytes_written,
+            "bytes_read": self.bytes_read,
+            "write_time_s": self.write_time,
+            "read_time_s": self.read_time,
+            "num_writes": self.num_writes,
+            "num_reads": self.num_reads,
+            "write_gb_s": (self.write_bandwidth / 1e9
+                           if self.write_time else None),
+            "read_gb_s": (self.read_bandwidth / 1e9
+                          if self.read_time else None),
+        }
+
+
+class StorageBackend(abc.ABC):
+    """Key/value blob store with measured per-backend bandwidth.
+
+    Subclasses implement `_write`/`_read`/`_delete`; the public methods
+    wrap them with timing so `stats` is always populated. `delete` is
+    missing-tolerant (dropping an un-spooled key is a no-op), matching
+    the spool's unconditional `drop`.
+    """
+
+    #: registry key, set by @register_backend
+    kind: str = "?"
+
+    def __init__(self) -> None:
+        self.stats = IoStats()
+        self._stats_lock = threading.Lock()
+        self._active = {"w": 0, "r": 0}
+        self._window_start = {"w": 0.0, "r": 0.0}
+
+    # ------------------------------------------------------- public API
+
+    def _enter(self, side: str) -> None:
+        with self._stats_lock:
+            if self._active[side] == 0:
+                self._window_start[side] = time.perf_counter()
+            self._active[side] += 1
+
+    def _exit(self, side: str) -> float:
+        """Returns elapsed busy time to credit (0 while others are still
+        inside the window)."""
+        now = time.perf_counter()
+        with self._stats_lock:
+            self._active[side] -= 1
+            if self._active[side] == 0:
+                return now - self._window_start[side]
+            return 0.0
+
+    def write(self, key: str, data: bytes) -> None:
+        self._enter("w")
+        try:
+            self._write(key, data)
+        except BaseException:
+            self._exit("w")
+            raise
+        dt = self._exit("w")
+        with self._stats_lock:
+            self.stats.bytes_written += len(data)
+            self.stats.write_time += dt
+            self.stats.num_writes += 1
+
+    def read(self, key: str) -> bytes:
+        self._enter("r")
+        try:
+            data = self._read(key)
+        except BaseException:
+            self._exit("r")
+            raise
+        dt = self._exit("r")
+        with self._stats_lock:
+            self.stats.bytes_read += len(data)
+            self.stats.read_time += dt
+            self.stats.num_reads += 1
+        return data
+
+    def delete(self, key: str) -> None:
+        self._delete(key)
+        with self._stats_lock:
+            self.stats.num_deletes += 1
+
+    def flush(self) -> None:
+        """Durability barrier; a no-op for backends without buffering."""
+
+    def reset_stats(self) -> None:
+        """Start a fresh measurement window (e.g. before a calibration
+        burst, so tier bandwidths reflect only uncontended writes)."""
+        with self._stats_lock:
+            self.stats = IoStats()
+
+    def calibrate(self, data: bytes, repeats: int = 2) -> None:
+        """Measure write bandwidth with a synthetic burst: reset stats,
+        write `repeats` copies of `data`, delete them. Composite
+        backends override this to exercise *every* tier — a tier the
+        burst never reaches would otherwise report infinite bandwidth
+        and the planner would treat spill traffic as free."""
+        self.reset_stats()
+        for i in range(repeats):
+            self.write(f"_calibrate{i}", data)
+        for i in range(repeats):
+            self.delete(f"_calibrate{i}")
+
+    def close(self) -> None:
+        self.flush()
+
+    def tier_bandwidths(self) -> List[TierBandwidth]:
+        """Measured per-tier write bandwidth for the adaptive planner.
+
+        Flat backends report one unbounded tier; `TieredBackend`
+        overrides this to expose its capacity-bounded upper tier plus
+        the lower backend's tiers.
+        """
+        return [TierBandwidth(self.kind, self.stats.write_bandwidth, None)]
+
+    # ---------------------------------------------------- to implement
+
+    @abc.abstractmethod
+    def _write(self, key: str, data: bytes) -> None: ...
+
+    @abc.abstractmethod
+    def _read(self, key: str) -> bytes: ...
+
+    @abc.abstractmethod
+    def _delete(self, key: str) -> None: ...
+
+
+# ---------------------------------------------------------------- registry
+
+BACKENDS: Dict[str, Type[StorageBackend]] = {}
+
+
+def register_backend(name: str):
+    def deco(cls: Type[StorageBackend]) -> Type[StorageBackend]:
+        cls.kind = name
+        BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def get_backend_cls(name: str) -> Type[StorageBackend]:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown storage backend {name!r}; "
+                       f"registered: {sorted(BACKENDS)}") from None

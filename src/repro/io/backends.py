@@ -1,0 +1,348 @@
+"""The four storage-backend implementations behind the `repro.io`
+registry: filesystem (seed behavior), multi-SSD striping, host-RAM, and
+the capacity-budgeted RAM-over-SSD tier."""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.adaptive import TierBandwidth
+from repro.io.backend import StorageBackend, register_backend
+
+
+@register_backend("fs")
+class FilesystemBackend(StorageBackend):
+    """One blob file per key in one directory — the seed ActivationSpool
+    path, extracted. The directory stands in for a single SSD."""
+
+    def __init__(self, directory: str):
+        super().__init__()
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.directory, f"{key}.act")
+
+    def _write(self, key: str, data: bytes) -> None:
+        with open(self._path(key), "wb") as f:
+            f.write(data)
+
+    def _read(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            return f.read()
+
+    def _delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except OSError:
+            pass
+
+
+@register_backend("striped")
+class StripedBackend(StorageBackend):
+    """Round-robin chunk striping across N directories.
+
+    Each directory stands in for one SSD of the paper's per-GPU array
+    (§3.4 uses 4x D7-P5810). A blob is split into `chunk_bytes` chunks;
+    chunk i lands on device (i % N), so sequential writes load all
+    devices evenly and reads fan out across the array. Per-device byte
+    counters feed `core.endurance.project_device_lifespans` so wear is
+    modeled per drive, not for the array as a whole.
+    """
+
+    def __init__(self, directories: Sequence[str], *,
+                 chunk_bytes: int = 4 << 20):
+        super().__init__()
+        if not directories:
+            raise ValueError("StripedBackend needs >= 1 directory")
+        if chunk_bytes <= 0:
+            raise ValueError("chunk_bytes must be positive")
+        self.directories = list(directories)
+        self.chunk_bytes = chunk_bytes
+        for d in self.directories:
+            os.makedirs(d, exist_ok=True)
+        self.device_write_bytes = [0] * len(self.directories)
+        self.device_read_bytes = [0] * len(self.directories)
+        self._dev_lock = threading.Lock()
+        # key -> number of chunks (rebuilt by probing if missing)
+        self._manifest: Dict[str, int] = {}
+
+    def _device(self, key: str, i: int) -> int:
+        # Start each key's round-robin at a key-dependent device (stable
+        # crc32, not salted hash()): otherwise every blob smaller than
+        # chunk_bytes would land on device 0 and the "array" would wear
+        # and bottleneck like a single drive.
+        start = zlib.crc32(key.encode()) % len(self.directories)
+        return (start + i) % len(self.directories)
+
+    def _chunk_path(self, key: str, i: int) -> str:
+        return os.path.join(self.directories[self._device(key, i)],
+                            f"{key}.c{i}")
+
+    def _write(self, key: str, data: bytes) -> None:
+        n = max(1, -(-len(data) // self.chunk_bytes))  # ceil, >=1
+        mv = memoryview(data)      # zero-copy chunk slicing
+        for i in range(n):
+            chunk = mv[i * self.chunk_bytes:(i + 1) * self.chunk_bytes]
+            with open(self._chunk_path(key, i), "wb") as f:
+                f.write(chunk)
+            with self._dev_lock:
+                self.device_write_bytes[self._device(key, i)] += \
+                    len(chunk)
+        with self._dev_lock:
+            self._manifest[key] = n
+        # a re-write with fewer chunks must not leave the old tail
+        # behind: the probe-based reader (fresh process over the same
+        # stripe dirs) would concatenate fresh + stale chunks, and
+        # delete would leak the tail
+        i = n
+        while os.path.exists(self._chunk_path(key, i)):
+            try:
+                os.unlink(self._chunk_path(key, i))
+            except OSError:
+                pass
+            i += 1
+
+    def _num_chunks(self, key: str) -> int:
+        with self._dev_lock:
+            n = self._manifest.get(key)
+        if n is not None:
+            return n
+        i = 0
+        while os.path.exists(self._chunk_path(key, i)):
+            i += 1
+        return i
+
+    def _read(self, key: str) -> bytes:
+        n = self._num_chunks(key)
+        if n == 0:
+            raise FileNotFoundError(key)
+        parts = []
+        for i in range(n):
+            with open(self._chunk_path(key, i), "rb") as f:
+                chunk = f.read()
+            parts.append(chunk)
+            with self._dev_lock:
+                self.device_read_bytes[self._device(key, i)] += \
+                    len(chunk)
+        return b"".join(parts)
+
+    def _delete(self, key: str) -> None:
+        n = self._num_chunks(key)
+        with self._dev_lock:
+            self._manifest.pop(key, None)
+        for i in range(n):
+            try:
+                os.unlink(self._chunk_path(key, i))
+            except OSError:
+                pass
+
+    def per_device_write_bytes(self) -> List[int]:
+        with self._dev_lock:
+            return list(self.device_write_bytes)
+
+
+@register_backend("mem")
+class HostMemoryBackend(StorageBackend):
+    """CPU-RAM tier: blobs live in a host-side dict. On its own it is the
+    fastest tier (no serialization to media); under `TieredBackend` it is
+    the bounded upper level of the hierarchy."""
+
+    def __init__(self):
+        super().__init__()
+        self._blobs: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def _write(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._blobs[key] = data
+
+    def _read(self, key: str) -> bytes:
+        with self._lock:
+            try:
+                return self._blobs[key]
+            except KeyError:
+                raise FileNotFoundError(key) from None
+
+    def _delete(self, key: str) -> None:
+        with self._lock:
+            self._blobs.pop(key, None)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._blobs
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(len(b) for b in self._blobs.values())
+
+
+@register_backend("tiered")
+class TieredBackend(StorageBackend):
+    """Host-RAM upper tier under a byte budget, spilling to a lower
+    backend (10Cache-style heterogeneous hierarchy).
+
+    Writes land in RAM while the budget holds; when a write would exceed
+    `capacity_bytes`, resident blobs are evicted to the lower backend in
+    *backward-access order*: the backward pass consumes keys in reverse
+    store order, so the earliest-stored keys are the ones needed furthest
+    in the future — they are evicted first (Belady's choice under the
+    spool's LIFO access pattern). Blobs larger than the whole budget
+    bypass RAM entirely.
+    """
+
+    def __init__(self, lower: StorageBackend, *, capacity_bytes: int,
+                 upper: Optional[HostMemoryBackend] = None):
+        super().__init__()
+        if capacity_bytes < 0:
+            raise ValueError("capacity_bytes must be >= 0")
+        self.upper = upper if upper is not None else HostMemoryBackend()
+        self.lower = lower
+        self.capacity_bytes = capacity_bytes
+        self._lock = threading.Lock()
+        self._spill_done = threading.Condition(self._lock)
+        # key -> nbytes, in store order (front = evict first)
+        self._resident: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
+        self._spilling: set = set()      # victims mid-flight to lower
+        self._kill: set = set()          # deleted while spilling
+        self._lowered: set = set()       # keys with a blob in lower
+        self._resident_bytes = 0         # running sum of _resident
+        self.evictions = 0
+        self.bytes_evicted = 0
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._resident_bytes
+
+    def _write(self, key: str, data: bytes) -> None:
+        if len(data) > self.capacity_bytes:
+            # Oversize blobs bypass RAM. Wait out any in-flight spill of
+            # this key first — the spiller's stale copy must neither
+            # clobber nor delete the new lower-tier blob — and claim the
+            # key out of _resident so no evictor picks it up meanwhile.
+            with self._spill_done:
+                while key in self._spilling:
+                    self._spill_done.wait()
+                nb = self._resident.pop(key, None)
+                if nb is not None:
+                    self._resident_bytes -= nb
+                self._lowered.add(key)
+            self.lower.write(key, data)
+            if nb is not None:
+                self.upper.delete(key)
+            return
+        # Choose victims under the lock, but do the spill I/O outside
+        # it: lower-tier writes are the slow part, and serializing every
+        # spool store thread behind one eviction would reduce the tiered
+        # backend to single-threaded SSD throughput. RAM can transiently
+        # exceed the budget by the blobs in flight; the bookkeeping
+        # (`_resident`) never does.
+        with self._lock:
+            victims = []
+            while self._resident and \
+                    self._resident_bytes + len(data) > self.capacity_bytes:
+                k, nb = self._resident.popitem(last=False)
+                self._resident_bytes -= nb
+                self._spilling.add(k)
+                victims.append(k)
+            self.upper.write(key, data)
+            prev = self._resident.pop(key, 0)
+            self._resident[key] = len(data)
+            self._resident_bytes += len(data) - prev
+            # a stale lower copy from an earlier oversize lease of this
+            # key must not outlive the resident-only delete path
+            stale_lower = key in self._lowered
+            self._lowered.discard(key)
+        if stale_lower:
+            self.lower.delete(key)
+        for k in victims:
+            try:
+                blob = self.upper.read(k)
+            except FileNotFoundError:
+                with self._spill_done:
+                    self._spilling.discard(k)
+                    self._kill.discard(k)
+                    self._spill_done.notify_all()
+                continue
+            # write lower BEFORE deleting upper, so a concurrent read
+            # always finds the blob on one side
+            self.lower.write(k, blob)
+            with self._spill_done:
+                self._spilling.discard(k)
+                killed = k in self._kill
+                self._kill.discard(k)
+                # spool keys are reused across steps: the key may have
+                # been re-written (a fresh resident blob) while we were
+                # spilling the old one
+                readmitted = k in self._resident
+                if not (killed or readmitted):
+                    self._lowered.add(k)
+                self.evictions += 1
+                self.bytes_evicted += len(blob)
+                self._spill_done.notify_all()
+            if killed or readmitted:
+                # our spilled copy is stale — it must not shadow the
+                # re-admitted blob (or survive a drop)
+                self.lower.delete(k)
+                if killed and not readmitted:
+                    self.upper.delete(k)
+            else:
+                self.upper.delete(k)
+
+    def _read(self, key: str) -> bytes:
+        # Try RAM first and fall through on miss: eviction writes to the
+        # lower tier *before* deleting from the upper, so a key mid-spill
+        # is always found on one side without taking the lock.
+        try:
+            return self.upper.read(key)
+        except FileNotFoundError:
+            return self.lower.read(key)
+
+    def _delete(self, key: str) -> None:
+        with self._lock:
+            nb = self._resident.pop(key, None)
+            resident = nb is not None
+            if resident:
+                self._resident_bytes -= nb
+            spilling = key in self._spilling
+            if spilling:
+                self._kill.add(key)    # the spiller finishes the delete
+            lowered = key in self._lowered
+            self._lowered.discard(key)
+        if resident:
+            self.upper.delete(key)
+        if not spilling and (lowered or not resident):
+            self.lower.delete(key)
+
+    def flush(self) -> None:
+        self.lower.flush()
+
+    def reset_stats(self) -> None:
+        super().reset_stats()
+        self.upper.reset_stats()
+        self.lower.reset_stats()
+
+    def calibrate(self, data: bytes, repeats: int = 2) -> None:
+        """Burst both tiers: a small burst fits the RAM budget, so the
+        lower tier would never be measured (and would read as infinitely
+        fast to the planner) if we only wrote through the front door."""
+        self.reset_stats()
+        for i in range(repeats):
+            self.upper.write(f"_calibrate{i}", data)
+        for i in range(repeats):
+            self.upper.delete(f"_calibrate{i}")
+        self.lower.calibrate(data, repeats)
+
+    def close(self) -> None:
+        self.lower.close()
+
+    def tier_bandwidths(self) -> List[TierBandwidth]:
+        up = TierBandwidth("host-ram", self.upper.stats.write_bandwidth,
+                           self.capacity_bytes)
+        return [up] + self.lower.tier_bandwidths()

@@ -1,0 +1,109 @@
+"""Pluggable byte codecs for spooled activation blobs.
+
+Replaces the spool's implicit raw-bytes format with a self-describing
+container: `pack` prefixes the encoded payload with a magic tag and the
+codec name, so `unpack` needs no out-of-band knowledge — a spool can be
+reconfigured between write and read, and mixed-codec directories stay
+readable. Codecs trade CPU for PCIe/SSD bandwidth (the knob the paper's
+§3.4 WAF analysis motivates: fewer bytes written is both faster on a
+saturated link and linearly more SSD lifespan).
+"""
+from __future__ import annotations
+
+import abc
+import struct
+import zlib
+from typing import Dict, Type, Union
+
+_MAGIC = b"RIO1"
+
+
+class Codec(abc.ABC):
+    #: registry key, set by @register_codec
+    name: str = "?"
+
+    @abc.abstractmethod
+    def encode(self, data: bytes) -> bytes: ...
+
+    @abc.abstractmethod
+    def decode(self, data: bytes) -> bytes: ...
+
+
+CODECS: Dict[str, Type[Codec]] = {}
+
+
+def register_codec(name: str):
+    def deco(cls: Type[Codec]) -> Type[Codec]:
+        cls.name = name
+        CODECS[name] = cls
+        return cls
+    return deco
+
+
+def get_codec(codec: Union[str, Codec, None]) -> Codec:
+    if codec is None:
+        return RawCodec()
+    if isinstance(codec, Codec):
+        return codec
+    try:
+        return CODECS[codec]()
+    except KeyError:
+        raise KeyError(f"unknown codec {codec!r}; "
+                       f"registered: {sorted(CODECS)}") from None
+
+
+@register_codec("raw")
+class RawCodec(Codec):
+    def encode(self, data: bytes) -> bytes:
+        return data
+
+    def decode(self, data: bytes) -> bytes:
+        return data
+
+
+@register_codec("zlib")
+class ZlibCodec(Codec):
+    """stdlib DEFLATE. Level 1 by default: activation tensors are mostly
+    low-entropy mantissa noise, so higher levels cost CPU for little
+    extra ratio on the store path."""
+
+    def __init__(self, level: int = 1):
+        self.level = level
+
+    def encode(self, data: bytes) -> bytes:
+        return zlib.compress(data, self.level)
+
+    def decode(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+def pack(payload: bytes, codec: Union[str, Codec, None] = None) -> bytes:
+    """magic | u8 name length | codec name | encoded payload."""
+    return pack_parts([payload], codec)
+
+
+def pack_parts(parts, codec: Union[str, Codec, None] = None) -> bytes:
+    """`pack`, but over a list of bytes-like payload parts: the raw
+    codec joins container header and parts in one pass (no intermediate
+    payload copy — the spool's hot store path)."""
+    c = get_codec(codec)
+    name = c.name.encode("ascii")
+    head = [_MAGIC, struct.pack("B", len(name)), name]
+    if isinstance(c, RawCodec):
+        return b"".join(head + list(parts))
+    return b"".join(head + [c.encode(b"".join(parts))])
+
+
+def unpack(blob):
+    """Inverse of `pack`; blobs without the magic tag are passed through
+    untouched (seed-format files stay readable). Raw-codec payloads come
+    back as a zero-copy memoryview of `blob`."""
+    if bytes(blob[:len(_MAGIC)]) != _MAGIC:
+        return blob
+    (nlen,) = struct.unpack_from("B", blob, len(_MAGIC))
+    off = len(_MAGIC) + 1
+    name = bytes(blob[off:off + nlen]).decode("ascii")
+    codec = get_codec(name)
+    payload = memoryview(blob)[off + nlen:]
+    return payload if isinstance(codec, RawCodec) \
+        else codec.decode(payload)

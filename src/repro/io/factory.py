@@ -1,0 +1,108 @@
+"""Backend construction from declarative config (`SpoolIoConfig`) and
+from compact CLI spec strings.
+
+Spec grammar (CLI surface, `--spool-backend`-style flags):
+
+    fs                      filesystem under the default spool dir
+    fs:/path                filesystem at /path
+    mem                     host-RAM tier
+    striped:/a,/b           stripe across the listed directories
+    striped@4               stripe across 4 subdirs of the default dir
+    striped:/base@4         stripe across 4 subdirs of /base
+    tiered:64mb             RAM budget 64 MiB over fs default
+    tiered:64mb,<spec>      RAM budget over any lower spec (recursive)
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import List, Optional
+
+from repro.io.backend import StorageBackend, get_backend_cls
+from repro.io.backends import (FilesystemBackend, HostMemoryBackend,
+                               StripedBackend, TieredBackend)
+
+_SUFFIX = {"kb": 1 << 10, "mb": 1 << 20, "gb": 1 << 30, "tb": 1 << 40,
+           "k": 1 << 10, "m": 1 << 20, "g": 1 << 30, "t": 1 << 40,
+           "b": 1}
+
+
+def parse_bytes(text: str) -> int:
+    """'64mb' / '1g' / '4096' -> bytes."""
+    s = str(text).strip().lower()
+    for suf in sorted(_SUFFIX, key=len, reverse=True):
+        if s.endswith(suf):
+            return int(float(s[:-len(suf)]) * _SUFFIX[suf])
+    return int(float(s))
+
+
+def _default_dir(base_dir: Optional[str]) -> str:
+    return base_dir or tempfile.mkdtemp(prefix="tba_spool_")
+
+
+def _stripe_dirs(base: str, n: int) -> List[str]:
+    return [os.path.join(base, f"stripe{i}") for i in range(n)]
+
+
+def backend_from_spec(spec: str, *,
+                      base_dir: Optional[str] = None) -> StorageBackend:
+    spec = (spec or "fs").strip()
+    kind, _, rest = spec.partition(":")
+    if "@" in kind:                       # striped@N shorthand
+        kind, _, n = kind.partition("@")
+        rest = f"@{n}"
+    get_backend_cls(kind)                 # fail fast on unknown kinds
+    if kind == "fs":
+        return FilesystemBackend(rest or _default_dir(base_dir))
+    if kind == "mem":
+        return HostMemoryBackend()
+    if kind == "striped":
+        if rest.startswith("@"):
+            dirs = _stripe_dirs(_default_dir(base_dir), int(rest[1:]))
+        elif "@" in rest:
+            base, _, n = rest.rpartition("@")
+            dirs = _stripe_dirs(base, int(n))
+        elif rest:
+            dirs = [d for d in rest.split(",") if d]
+        else:
+            dirs = _stripe_dirs(_default_dir(base_dir), 2)
+        return StripedBackend(dirs)
+    if kind == "tiered":
+        budget, _, lower_spec = rest.partition(",")
+        if not budget:
+            raise ValueError("tiered spec needs a RAM budget, e.g. "
+                             "'tiered:64mb'")
+        lower = backend_from_spec(lower_spec or "fs", base_dir=base_dir)
+        return TieredBackend(lower, capacity_bytes=parse_bytes(budget))
+    raise ValueError(f"unhandled backend spec {spec!r}")
+
+
+def build_backend(io_cfg, *,
+                  default_dir: Optional[str] = None) -> StorageBackend:
+    """Construct a backend from a `repro.configs.base.SpoolIoConfig`
+    (duck-typed so `repro.io` stays import-independent of configs)."""
+    kind = io_cfg.backend
+    get_backend_cls(kind)
+
+    def directory() -> str:
+        # resolved lazily: only the branches that actually store to a
+        # directory may mkdtemp one
+        return io_cfg.directory or _default_dir(default_dir)
+
+    if kind == "mem":
+        return HostMemoryBackend()
+    if kind == "fs":
+        return FilesystemBackend(directory())
+    if kind == "striped":
+        dirs = list(io_cfg.stripe_dirs) or _stripe_dirs(directory(), 2)
+        return StripedBackend(dirs, chunk_bytes=io_cfg.stripe_chunk_bytes)
+    if kind == "tiered":
+        if io_cfg.stripe_dirs:
+            lower: StorageBackend = StripedBackend(
+                list(io_cfg.stripe_dirs),
+                chunk_bytes=io_cfg.stripe_chunk_bytes)
+        else:
+            lower = FilesystemBackend(directory())
+        return TieredBackend(lower,
+                             capacity_bytes=io_cfg.host_mem_budget_bytes)
+    raise ValueError(f"unhandled backend kind {kind!r}")

@@ -1,0 +1,73 @@
+"""Array-list <-> bytes serialization for spooled residuals.
+
+Grown from the seed `core/spool.py` helpers (`_serialize`/`_deserialize`)
+with two changes:
+
+* single-copy format: ``RSA2 | u32 header_len | pickled metas | raw
+  buffers`` assembled with one ``b"".join`` over memoryviews — the seed's
+  tobytes-then-pickle path copied every payload twice. `serialize_parts`
+  exposes the part list so the codec container can join once more parts
+  instead of re-copying the payload.
+* deserialized arrays are materialized into one writable backing buffer
+  (`np.frombuffer` over a pickle blob returns read-only views), so
+  fetched residuals behave like the originals downstream.
+
+Legacy blobs (the seed's pickled ``(metas, blobs)`` tuples) still load.
+"""
+from __future__ import annotations
+
+import math
+import pickle
+import struct
+from typing import List, Sequence
+
+import numpy as np
+
+_MAGIC = b"RSA2"
+
+
+def _np_dtype(dt: str) -> np.dtype:
+    import ml_dtypes
+    return np.dtype(getattr(ml_dtypes, dt, dt) if isinstance(dt, str)
+                    else dt)
+
+
+def serialize_parts(leaves: Sequence[np.ndarray]) -> List[bytes]:
+    """The blob as a list of bytes-like parts (no payload copy; array
+    buffers are exposed as memoryviews). ``b"".join(parts)`` is the
+    canonical single-copy assembly."""
+    arrs = [np.ascontiguousarray(np.asarray(a)) for a in leaves]
+    metas = [(a.shape, str(a.dtype)) for a in arrs]
+    header = pickle.dumps(metas, protocol=4)
+    parts: List[bytes] = [_MAGIC, struct.pack("<I", len(header)), header]
+    parts += [a.reshape(-1).view(np.uint8).data for a in arrs]
+    return parts
+
+
+def serialize_leaves(leaves: Sequence[np.ndarray]) -> bytes:
+    return b"".join(serialize_parts(leaves))
+
+
+def deserialize_leaves(data) -> List[np.ndarray]:
+    """bytes / bytearray / memoryview -> list of *writable* arrays."""
+    if bytes(data[:4]) == _MAGIC:
+        buf = memoryview(bytearray(data))    # one writable copy
+        (hlen,) = struct.unpack_from("<I", buf, 4)
+        off = 8
+        metas = pickle.loads(bytes(buf[off:off + hlen]))
+        off += hlen
+        out = []
+        for shape, dt in metas:
+            np_dt = _np_dtype(dt)
+            n = np_dt.itemsize * math.prod(shape)
+            out.append(np.frombuffer(buf[off:off + n],
+                                     dtype=np_dt).reshape(shape))
+            off += n
+        return out
+    # legacy seed format: pickled (metas, blobs)
+    metas, blobs = pickle.loads(data)
+    out = []
+    for (shape, dt), blob in zip(metas, blobs):
+        out.append(np.frombuffer(bytearray(blob),
+                                 dtype=_np_dtype(dt)).reshape(shape))
+    return out

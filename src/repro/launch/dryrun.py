@@ -18,10 +18,11 @@ import jax
 from repro.configs.base import SHAPES
 from repro.configs.registry import (ARCH_IDS, cell_skip_reason, get_config,
                                     get_shape)
-from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.hlo_stats import analyze_hlo, cost_analysis_dict
 from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
                                make_production_mesh, mesh_axes)
 from repro.launch.steps import make_step
+from repro.io.backend import NOMINAL_WRITE_BW
 from repro.models.api import build_model
 from repro.optim.optimizers import adamw, sgd
 
@@ -49,7 +50,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              out_dir: str, dump_hlo: bool = False,
              policy: Optional[str] = None, attn_chunk: int = 1024,
              force: bool = False, tag: str = "",
-             baseline: bool = False) -> Dict[str, Any]:
+             baseline: bool = False,
+             io_backend: str = "fs") -> Dict[str, Any]:
     if baseline:
         os.environ["REPRO_NO_BLOCKED_ATTN"] = "1"
         tag = tag or "paperbase"
@@ -103,7 +105,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             t_compile = time.time() - t0
 
         mem = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         hlo_text = compiled.as_text()
         ana = analyze_hlo(hlo_text, chips)
         if dump_hlo:
@@ -152,6 +154,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "model_flops_global": mf,
                 "useful_flops_ratio": (mf / (flops_dev * chips)
                                        if flops_dev else None),
+                # Offloaded-activation traffic projected onto the chosen
+                # repro.io storage backend at its nominal write rate:
+                # would the store path keep up with this cell?
+                "io_backend": io_backend,
+                "io_write_bw": NOMINAL_WRITE_BW[io_backend],
+                "t_host_io_s": (ana.host_bytes
+                                / NOMINAL_WRITE_BW[io_backend]),
             },
         )
     except Exception as e:  # record the failure, don't kill the sweep
@@ -233,6 +242,10 @@ def main() -> None:
     ap.add_argument("--baseline", action="store_true",
                     help="disable beyond-paper graph opts (blocked "
                          "attention, chunked CE) for before/after runs")
+    ap.add_argument("--io-backend", default="fs",
+                    choices=sorted(NOMINAL_WRITE_BW),
+                    help="repro.io backend whose nominal write bandwidth "
+                         "prices the projected host-offload traffic")
     ap.add_argument("--timeout", type=int, default=2400)
     args = ap.parse_args()
 
@@ -248,6 +261,8 @@ def main() -> None:
         extra += ["--attn-chunk", str(args.attn_chunk)]
     if args.tag:
         extra += ["--tag", args.tag]
+    if args.io_backend != "fs":
+        extra += ["--io-backend", args.io_backend]
 
     if args.all:
         n = sweep(meshes, args.out, args.force, args.timeout, extra)
@@ -259,7 +274,8 @@ def main() -> None:
                        multi_pod=(mesh_name == "multi"), out_dir=args.out,
                        dump_hlo=args.dump_hlo, policy=args.policy,
                        attn_chunk=args.attn_chunk, force=args.force,
-                       tag=args.tag, baseline=args.baseline)
+                       tag=args.tag, baseline=args.baseline,
+                       io_backend=args.io_backend)
         status = rec.get("status")
         if status == "ok":
             rl = rec["roofline"]

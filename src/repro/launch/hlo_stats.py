@@ -66,6 +66,15 @@ _NO_TRAFFIC = {
 }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() normalized across jax versions: newer
+    jax returns one dict, older returns a per-device list of dicts."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _shape_dims(shape_text: str) -> List[Tuple[str, List[int]]]:
     out = []
     for dt, dims in _SHAPE_RE.findall(shape_text):

@@ -79,6 +79,20 @@ def main() -> None:
     ap.add_argument("--min-offload", type=int, default=None,
                     help="staged engine: min elements to offload "
                          "(default: paper's 2**20)")
+    ap.add_argument("--spool-backend", default="fs",
+                    choices=["fs", "striped", "mem", "tiered"],
+                    help="staged engine: storage backend for the "
+                         "activation spool (repro.io)")
+    ap.add_argument("--spool-dir", default=None,
+                    help="spool directory (default: fresh temp dir)")
+    ap.add_argument("--stripe-dirs", default=None,
+                    help="comma-separated stripe directories for "
+                         "--spool-backend striped/tiered (default: 2 "
+                         "subdirs of the spool dir)")
+    ap.add_argument("--codec", default="raw", choices=["raw", "zlib"],
+                    help="payload codec for spooled residuals")
+    ap.add_argument("--host-mem-budget-mb", type=int, default=256,
+                    help="tiered backend: host-RAM tier budget in MiB")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch)
@@ -96,12 +110,22 @@ def main() -> None:
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M engine={args.engine}")
 
     if args.engine == "staged":
+        from repro.configs.base import SpoolIoConfig
         from repro.core.staged import StagedTrainer
         settings = RunSettings(attn_impl="xla", attn_chunk=256,
                                param_dtype=cfg.dtype)
+        stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
+                            if d)
+        io_config = SpoolIoConfig(
+            backend=args.spool_backend, directory=args.spool_dir,
+            stripe_dirs=stripe_dirs, codec=args.codec,
+            host_mem_budget_bytes=args.host_mem_budget_mb << 20)
         trainer = StagedTrainer(api, settings, opt,
                                 strategy=args.strategy,
+                                spool_dir=args.spool_dir,
+                                io_config=io_config,
                                 min_offload_elements=args.min_offload)
+        print(f"spool backend={args.spool_backend} codec={args.codec}")
         opt_state = opt.init(params)
         for step in range(args.steps):
             batches = [next(loader) for _ in range(args.microbatches)]
@@ -112,6 +136,16 @@ def main() -> None:
                   f"act_peak {rep.peak_activation_bytes/1e6:.1f} MB "
                   f"offloaded {rep.stats.bytes_offloaded/1e6:.1f} MB",
                   flush=True)
+        bk = trainer.spool.backend
+        io = bk.stats
+        if io.num_writes:
+            print(f"backend[{bk.kind}] wrote {io.bytes_written/1e6:.1f} MB"
+                  f" @ {io.write_bandwidth/1e9:.2f} GB/s, read "
+                  f"{io.bytes_read/1e6:.1f} MB", flush=True)
+        if hasattr(bk, "per_device_write_bytes"):
+            per_dev = bk.per_device_write_bytes()
+            print("stripe write balance:",
+                  [f"{b/1e6:.1f}MB" for b in per_dev], flush=True)
         trainer.close()
         return
 

@@ -24,10 +24,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import activation, dense_init
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.parallel.shmap import shard_map as _shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -123,7 +120,19 @@ def apply_moe(params, x, settings: MoESettings, *,
     E, k = settings.num_experts, settings.top_k
 
     if mesh is None or ep_axis is None:
-        capacity = int(math.ceil(B * S * k / E * settings.capacity_factor))
+        # Dropless on the single-device path: an expert can receive at
+        # most one assignment per token, so capacity B*S covers the
+        # worst case. Capacity-factor drops here would make the output
+        # depend on batch composition — a full-sequence forward and a
+        # prefill of the same prefix would drop *different* tokens,
+        # breaking prefill/decode consistency (the serving invariant).
+        # Cost: the dispatch buffer is (E, B*S, D) instead of
+        # (E, ~B*S*k/E, D); at large single-device scale a sort-based
+        # ragged dispatch would avoid the E-fold worst case (capacity
+        # must be trace-static under jit, so it cannot adapt to the
+        # routed load). The EP shard_map path below keeps GShard
+        # capacity semantics.
+        capacity = B * S
         y = _moe_shard_body(xf, eids, weights, params["w_in"],
                             params["w_gate"], params["w_out"],
                             settings=settings, e0=0, num_local=E,

@@ -68,7 +68,11 @@ def _axis_if(dim: int, axis, mesh) -> Optional[Any]:
         n = 1
         for a in axis:
             n *= mesh.shape[a]
-        return axis if _div(dim, n) else None
+        if not _div(dim, n):
+            return None
+        # newer jax canonicalizes 1-tuples to the bare name; do it
+        # ourselves so specs compare equal on every version
+        return axis[0] if len(axis) == 1 else axis
     return axis if _div(dim, mesh.shape[axis]) else None
 
 

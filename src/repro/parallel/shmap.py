@@ -1,0 +1,24 @@
+"""shard_map compatibility shim.
+
+jax renamed `check_rep` to `check_vma` (and moved shard_map out of
+experimental) across versions; callers here always say `check_vma` and
+this wrapper translates to whatever the installed jax understands.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _impl          # jax >= 0.4.35
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _impl
+
+_PARAMS = set(inspect.signature(_impl).parameters)
+
+
+def shard_map(f, **kwargs):
+    if "check_vma" in kwargs and "check_vma" not in _PARAMS:
+        flag = kwargs.pop("check_vma")
+        if "check_rep" in _PARAMS:
+            kwargs["check_rep"] = flag
+    return _impl(f, **kwargs)

@@ -4,6 +4,10 @@ import threading
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional "
+                           "hypothesis extra")
 from hypothesis import given, settings as hsettings, strategies as st
 
 from repro.core.accounting import MemoryTracker

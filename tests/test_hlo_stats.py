@@ -89,5 +89,6 @@ def test_end_to_end_scan_flops_counted():
     assert ana.flops == pytest.approx(want, rel=0.01)
     # XLA's own cost_analysis counts the body once — our whole reason for
     # existing; confirm the discrepancy is real.
-    xla_flops = co.cost_analysis().get("flops", 0)
+    from repro.launch.hlo_stats import cost_analysis_dict
+    xla_flops = cost_analysis_dict(co).get("flops", 0)
     assert xla_flops < want / 2

@@ -38,14 +38,19 @@ def _batch(cfg, seed=0):
 
 @pytest.fixture(scope="module")
 def runs():
-    """One fixture runs all three strategies on the same model/batch."""
-    cfg = small_gpt(128, 3)
+    """One fixture runs all three strategies on the same model/batch.
+
+    Six layers (not three) so the forward pass is several times longer
+    than one store's latency — the paper's operating regime, where
+    writes land during forward and the offload peak reduction is
+    unambiguous rather than a race with the first backward fetch."""
+    cfg = small_gpt(128, 6)
     out = {}
     for strategy in ("keep", "offload", "recompute"):
         api, tr, params, opt_state = _setup(cfg, strategy)
         batch = _batch(cfg)
         reports, losses = [], []
-        for step in range(3):
+        for step in range(4):
             params, opt_state, rep = tr.train_step(params, opt_state,
                                                    [batch])
             reports.append(rep)
@@ -70,10 +75,12 @@ def test_strategies_numerically_identical(runs):
 
 
 def test_offload_reduces_activation_peak(runs):
-    """Paper Fig. 7/10: the activation peak drops with offloading."""
+    """Paper Fig. 7/10: the activation peak drops with offloading.
+    Steps 0-1 are excluded: 0 profiles (and compiles), 1 pays the
+    plan transition — the claim is about steady state."""
     keep = max(r.peak_activation_bytes for r in runs["keep"]["reports"])
     off = max(r.peak_activation_bytes
-              for r in runs["offload"]["reports"][1:])
+              for r in runs["offload"]["reports"][2:])
     assert off < keep * 0.75, (off, keep)
 
 
@@ -81,7 +88,7 @@ def test_offload_reduces_backward_begin_footprint(runs):
     """Paper Fig. 7: the begin-of-backward footprint drops ~45%."""
     keep = max(r.backward_begin_bytes for r in runs["keep"]["reports"])
     off = max(r.backward_begin_bytes
-              for r in runs["offload"]["reports"][1:])
+              for r in runs["offload"]["reports"][2:])
     assert off < keep * 0.75, (off, keep)
 
 
