@@ -1,18 +1,13 @@
-"""Quickstart: build a model from a config, run the TBA offloading
-trainer for a few steps, inspect what the spool did.
+"""Quickstart: one front door for training — `TrainSession` resolves the
+config, picks the engine, owns the activation spool, and streams unified
+per-step reports.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
 
-import jax
-import numpy as np
-
 from repro.configs import get_config, reduced
-from repro.core.staged import StagedTrainer
-from repro.models.api import build_model
-from repro.models.transformer import RunSettings
-from repro.optim.optimizers import adamw
+from repro.session import AdaptivePolicy, SpoolIoConfig, TrainSession
 
 
 def main():
@@ -20,35 +15,30 @@ def main():
     # it to CPU scale while keeping the family (GQA + QKV-bias for qwen).
     cfg = dataclasses.replace(reduced(get_config("qwen2.5-3b")),
                               dtype="float32")
-    api = build_model(cfg)
-    settings = RunSettings(attn_impl="xla", attn_chunk=64,
-                           param_dtype="float32")
-    opt = adamw(1e-3)
 
-    trainer = StagedTrainer(api, settings, opt, strategy="offload",
-                            min_offload_elements=2 ** 12)
-    params = api.init(jax.random.key(0))
-    opt_state = opt.init(params)
+    with TrainSession(
+            cfg, engine="staged",
+            policy=AdaptivePolicy(),            # paper §3.3.3 planner
+            io=SpoolIoConfig(backend="fs", codec="raw"),
+            optimizer="adamw", lr=1e-3,
+            batch_size=4, seq_len=64,
+            min_offload_elements=2 ** 12) as sess:
 
-    rng = np.random.default_rng(0)
-    B, S = 4, 64
-    for step in range(5):
-        toks = rng.integers(0, cfg.vocab_size, (B, S + 1))
-        batch = {"tokens": jax.numpy.asarray(toks[:, :-1]),
-                 "labels": jax.numpy.asarray(toks[:, 1:])}
-        params, opt_state, rep = trainer.train_step(params, opt_state,
-                                                    [batch])
-        print(f"step {step} loss={rep.loss:.4f} "
-              f"step_time={rep.step_time:.2f}s "
-              f"act_peak={rep.peak_activation_bytes/1e6:.1f}MB "
-              f"offloaded={rep.stats.bytes_offloaded/1e6:.1f}MB "
-              f"forwarded={rep.stats.bytes_forwarded/1e6:.1f}MB")
-    if rep.plan:
-        print(f"adaptive plan: offload modules 0..{rep.plan.last_offloaded}"
-              f" of {len(rep.plan.offload)} "
-              f"(required {rep.plan.required_bw/1e6:.0f} MB/s of "
-              f"{rep.plan.write_bw/1e6:.0f} MB/s measured)")
-    trainer.close()
+        def show(rep):
+            print(f"step {rep.step - 1} loss={rep.loss:.4f} "
+                  f"step_time={rep.step_time:.2f}s "
+                  f"act_peak={rep.peak_activation_bytes/1e6:.1f}MB "
+                  f"offloaded={rep.stats.bytes_offloaded/1e6:.1f}MB "
+                  f"forwarded={rep.stats.bytes_forwarded/1e6:.1f}MB")
+
+        result = sess.run(5, on_report=show)
+        rep = result.reports[-1]
+        if rep.plan:
+            print(f"adaptive plan: offload modules "
+                  f"0..{rep.plan.last_offloaded} of "
+                  f"{len(rep.plan.offload)} "
+                  f"(required {rep.plan.required_bw/1e6:.0f} MB/s of "
+                  f"{rep.plan.write_bw/1e6:.0f} MB/s measured)")
 
 
 if __name__ == "__main__":

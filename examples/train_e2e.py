@@ -19,10 +19,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--arch", default="small-gpt")
+    ap.add_argument("--engine", default="jit",
+                    choices=["jit", "staged"])
     args, _ = ap.parse_known_args()
     ckpt = tempfile.mkdtemp(prefix="e2e_ckpt_")
     metrics = os.path.join(ckpt, "metrics.jsonl")
-    sys.argv = ["train", "--arch", args.arch, "--engine", "jit",
+    sys.argv = ["train", "--arch", args.arch, "--engine", args.engine,
                 "--steps", str(args.steps), "--batch", "8",
                 "--seq", "128", "--ckpt", ckpt, "--ckpt-every", "100",
                 "--metrics", metrics]

@@ -189,3 +189,40 @@ class CheckpointManager:
         self.wait()
         return restore_checkpoint(self.dir, tree_like, step=step,
                                   shardings=shardings)
+
+
+# ------------------------------------------------- train-state helpers
+
+def save_train_state(ckpt: "CheckpointManager", step: int, params, opt_state,
+                     loader=None, *, final: bool = False) -> None:
+    """One canonical layout for a training checkpoint (params + optimizer
+    state + data cursor) — shared by TrainLoop and TrainSession so the
+    two drivers cannot drift apart."""
+    meta = {"data": loader.state_dict()
+            if hasattr(loader, "state_dict") else {},
+            "final": final}
+    ckpt.save(step, {"params": params, "opt_state": opt_state},
+              metadata=meta)
+    if final:
+        ckpt.wait()
+
+
+def restore_train_state(ckpt: "CheckpointManager", params, opt_state,
+                        loader=None, *, shardings=None):
+    """Restore the latest committed train-state checkpoint (the inverse
+    of `save_train_state`). `params`/`opt_state` provide the target tree
+    structure; `shardings` reshards onto the current mesh. Returns
+    (step, params, opt_state) or None when no checkpoint exists."""
+    step = ckpt.latest_step()
+    if step is None:
+        return None
+    like = {"params": params, "opt_state": opt_state}
+    like = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if hasattr(x, "shape") else x, like)
+    restored, manifest = ckpt.restore(like, step=step,
+                                      shardings=shardings)
+    if hasattr(loader, "load_state_dict") and \
+            manifest["metadata"].get("data"):
+        loader.load_state_dict(manifest["metadata"]["data"])
+    return step, restored["params"], restored["opt_state"]

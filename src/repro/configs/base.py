@@ -158,7 +158,12 @@ class SpoolIoConfig:
     backend: "fs" (one directory / one SSD), "striped" (round-robin
     chunks across `stripe_dirs`, a multi-SSD array), "mem" (host RAM),
     or "tiered" (RAM under `host_mem_budget_bytes`, spilling to a lower
-    fs/striped backend)."""
+    fs/striped backend).
+
+    host_offload: what the jit engine stages through the spool between
+    steps — "none" (spool unused by the jit engine; the staged engine
+    ignores this field) or "opt_state" (optimizer moments live on the
+    selected backend while the step executes, 10Cache-style)."""
     backend: str = "fs"
     directory: Optional[str] = None        # None -> fresh temp dir
     stripe_dirs: Tuple[str, ...] = ()
@@ -168,12 +173,15 @@ class SpoolIoConfig:
     store_threads: int = 4
     load_threads: int = 4
     bandwidth_limit: Optional[float] = None
+    host_offload: str = "none"             # none | opt_state (jit engine)
 
     def validate(self) -> "SpoolIoConfig":
         assert self.backend in ("fs", "striped", "mem", "tiered"), \
             self.backend
         assert self.stripe_chunk_bytes > 0
         assert self.host_mem_budget_bytes >= 0
+        assert self.host_offload in ("none", "opt_state"), \
+            self.host_offload
         if self.backend == "striped":
             assert len(self.stripe_dirs) != 1, \
                 "striping across one directory is just 'fs'"

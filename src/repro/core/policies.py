@@ -1,0 +1,174 @@
+"""Offload policies: first-class placement objects for the staged engine.
+
+The seed API selected residual placement with a `strategy: str` plus an
+`adaptive: bool` flag threaded through `StagedTrainer`. That flag soup is
+replaced by `OffloadPolicy` objects — the swappable scheduling seam the
+interoperability papers (GreedySnake, 10Cache) argue for: the execution
+engine asks the policy two questions and never interprets strings.
+
+    should_offload(stage, profile)   -> spool this stage's residuals?
+    on_profile(profiles, bandwidths) -> digest the profiling step
+                                        (AdaptivePolicy: compute the plan)
+
+Policies:
+  KeepPolicy       residuals stay on device (the ROK "K" axis)
+  SpoolPolicy      offload every eligible stage unconditionally ("O")
+  RecomputePolicy  layerwise recomputation; only module inputs kept ("R")
+  AdaptivePolicy   paper §3.3.3: profile step 0, then offload only the
+                   prefix the measured store bandwidth can hide
+
+`resolve_policy` maps the legacy surface (strategy strings, adaptive
+flag) onto these objects so seed call shapes keep working.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+from repro.core.adaptive import (BWD_FACTOR, BandwidthLike, ModuleProfile,
+                                 OffloadPlan, plan_offload)
+
+#: stage roles whose backward can be recomputed from the module input
+RECOMPUTABLE_ROLES = ("layer", "enc_layer")
+
+
+class OffloadPolicy:
+    """Base policy: decides, per stage, where residuals live.
+
+    Subclasses override `should_offload` (and, for profile-driven
+    policies, `wants_profile` + `on_profile`). `strategy` is the legacy
+    string the policy corresponds to — kept so reports, benchmarks and
+    CLI output stay stable across the API redesign.
+    """
+
+    strategy = "offload"
+
+    #: engine runs a profiling step (warm re-run + wait_io + calibrate)
+    #: while this is True
+    wants_profile = False
+
+    plan: Optional[OffloadPlan] = None
+
+    def recomputes(self, role: str) -> bool:
+        """True if this stage's backward should re-run forward instead of
+        saving residuals."""
+        return False
+
+    def should_offload(self, stage: int,
+                       profile: Optional[ModuleProfile] = None) -> bool:
+        raise NotImplementedError
+
+    def on_profile(self, profiles: Sequence[ModuleProfile],
+                   bandwidths: BandwidthLike) -> Optional[OffloadPlan]:
+        """Digest the profiling step. Returns the plan (or None when the
+        policy is static)."""
+        return None
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class KeepPolicy(OffloadPolicy):
+    """All residuals stay in device memory (tracked for the footprint
+    curve, never written)."""
+
+    strategy = "keep"
+
+    def should_offload(self, stage, profile=None) -> bool:
+        return False
+
+
+class SpoolPolicy(OffloadPolicy):
+    """Unconditional TBA: every eligible stage's residuals go to the
+    spool (the non-adaptive `strategy="offload", adaptive=False` form)."""
+
+    strategy = "offload"
+
+    def should_offload(self, stage, profile=None) -> bool:
+        return True
+
+
+class RecomputePolicy(OffloadPolicy):
+    """Layerwise full recomputation: layer stages keep only their input
+    and re-run forward during backward; non-layer stages keep residuals
+    on device."""
+
+    strategy = "recompute"
+
+    def recomputes(self, role: str) -> bool:
+        return role in RECOMPUTABLE_ROLES
+
+    def should_offload(self, stage, profile=None) -> bool:
+        return False
+
+
+class AdaptivePolicy(OffloadPolicy):
+    """Paper §3.3.3: offload everything during the profiling step, then
+    plan the largest offloaded prefix whose transfer deadline the
+    measured (per-tier) store bandwidth can hold."""
+
+    strategy = "offload"
+
+    def __init__(self, *, bwd_factor: float = BWD_FACTOR,
+                 always_keep_last: bool = True):
+        self.bwd_factor = bwd_factor
+        self.always_keep_last = always_keep_last
+        self.plan = None
+        self.profiles: Optional[List[ModuleProfile]] = None
+
+    @property
+    def wants_profile(self) -> bool:
+        return self.plan is None
+
+    def should_offload(self, stage, profile=None) -> bool:
+        if self.plan is None:
+            return True      # profiling step offloads everything it can
+        return self.plan.offload[stage]
+
+    def on_profile(self, profiles, bandwidths) -> OffloadPlan:
+        self.profiles = list(profiles)
+        self.plan = plan_offload(self.profiles, bandwidths,
+                                 bwd_factor=self.bwd_factor,
+                                 always_keep_last=self.always_keep_last)
+        return self.plan
+
+    def __repr__(self):
+        return (f"AdaptivePolicy(bwd_factor={self.bwd_factor}, "
+                f"planned={self.plan is not None})")
+
+
+#: what the legacy strategy strings resolve to
+_STRATEGIES = ("keep", "offload", "recompute", "adaptive", "spool")
+
+
+def resolve_policy(policy: Union[OffloadPolicy, str, None] = None, *,
+                   strategy: Optional[str] = None,
+                   adaptive: Optional[bool] = None) -> OffloadPolicy:
+    """One resolver for every call shape.
+
+    New API: pass an `OffloadPolicy` (or its name: "keep" / "offload" /
+    "recompute" / "adaptive" / "spool"). Legacy shim: `strategy=` +
+    `adaptive=` keyword pair, with the seed defaults (offload,
+    adaptive=True) when everything is None. A bare "offload" keeps the
+    seed meaning — adaptive unless `adaptive=False` is passed.
+    """
+    if policy is not None and (strategy is not None or adaptive is not None):
+        raise ValueError("pass either policy= or the legacy "
+                         "strategy=/adaptive= pair, not both")
+    if isinstance(policy, OffloadPolicy):
+        return policy
+    name = policy if policy is not None else strategy
+    if name is None:
+        name = "offload"
+    if not isinstance(name, str) or name not in _STRATEGIES:
+        raise ValueError(f"unknown offload policy {name!r}; expected an "
+                         f"OffloadPolicy or one of {_STRATEGIES}")
+    if name == "keep":
+        return KeepPolicy()
+    if name == "recompute":
+        return RecomputePolicy()
+    if name == "spool":
+        return SpoolPolicy()
+    if name == "adaptive":
+        return AdaptivePolicy()
+    # "offload": seed semantics — adaptive unless explicitly disabled
+    return SpoolPolicy() if adaptive is False else AdaptivePolicy()

@@ -1,0 +1,51 @@
+"""Unified per-step report emitted by both training engines.
+
+One schema for the staged (TBA) engine and the whole-step jit engine, so
+`TrainSession` callers, the metrics JSONL, and the benchmarks read the
+same fields regardless of which engine produced a step. The staged
+engine fills every field; the jit engine leaves the activation-footprint
+fields at 0 (XLA owns device memory there) and fills the spool fields
+only when the host-offload path is active.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+
+@dataclass
+class StepReport:
+    loss: float
+    step_time: float
+    peak_activation_bytes: int = 0
+    backward_begin_bytes: int = 0
+    stats: Any = None                  # SpoolStats (or None: no spool)
+    plan: Any = None                   # OffloadPlan (staged+adaptive only)
+    step: int = -1                     # optimizer step index (-1: unset)
+    engine: str = ""                   # "staged" | "jit"
+    tokens_per_s: float = 0.0
+    # engine-specific scalar metrics (jit: the step's full aux dict —
+    # ce, tokens, moe_lb/moe_z on MoE archs, ...); merged into the JSONL
+    extra: Dict[str, float] = field(default_factory=dict)
+
+    def to_metrics(self) -> Dict[str, Any]:
+        """Flat JSON-able dict — the unified metrics-JSONL schema."""
+        rec: Dict[str, Any] = {
+            "step": self.step,
+            "engine": self.engine,
+            "loss": float(self.loss),
+            "step_time_s": float(self.step_time),
+            "tokens_per_s": float(self.tokens_per_s),
+            "peak_activation_bytes": int(self.peak_activation_bytes),
+            "backward_begin_bytes": int(self.backward_begin_bytes),
+        }
+        if self.stats is not None:
+            rec["bytes_offloaded"] = int(self.stats.bytes_offloaded)
+            rec["bytes_loaded"] = int(self.stats.bytes_loaded)
+            rec["bytes_forwarded"] = int(self.stats.bytes_forwarded)
+            rec["fetch_wait_s"] = float(self.stats.fetch_wait_time)
+        if self.plan is not None:
+            rec["plan_last_offloaded"] = int(self.plan.last_offloaded)
+        for k, v in self.extra.items():
+            rec.setdefault(k, v)
+        return rec

@@ -22,6 +22,7 @@ bandwidth_limit still simulates a slower tier for the ROK sweeps.
 from __future__ import annotations
 
 import queue
+import tempfile
 import threading
 import time
 from dataclasses import dataclass
@@ -41,6 +42,46 @@ from repro.io.serde import (deserialize_leaves, serialize_leaves,
 
 # job states
 QUEUED, RUNNING, DONE, CANCELED = range(4)
+
+
+def build_spool(io_config=None, *, backend=None, spool_dir=None,
+                codec=None, store_threads=None, load_threads=None,
+                bandwidth_limit=None, tracker=None,
+                min_offload_elements=None):
+    """One spool-construction path for every engine.
+
+    Storage selection, most specific wins: an explicit StorageBackend >
+    a declarative SpoolIoConfig > the seed behavior (filesystem backend
+    in spool_dir / a fresh temp dir). Explicit keyword arguments win
+    over the config's fields. Returns (spool, owned_tmpdirs) — the
+    caller must rmtree the listed temp dirs on close."""
+    owned = []
+    if backend is None and io_config is not None:
+        from repro.io import build_backend
+        io_config.validate()
+        backend = build_backend(io_config, default_dir=spool_dir)
+        owned += list(getattr(backend, "owned_tmpdirs", ()))
+        codec = io_config.codec if codec is None else codec
+        if store_threads is None:
+            store_threads = io_config.store_threads
+        if load_threads is None:
+            load_threads = io_config.load_threads
+        if bandwidth_limit is None:
+            bandwidth_limit = io_config.bandwidth_limit
+    if backend is None:
+        if spool_dir is None:
+            spool_dir = tempfile.mkdtemp(prefix="tba_spool_")
+            owned.append(spool_dir)
+        backend = spool_dir
+    spool = ActivationSpool(
+        backend, codec=codec,
+        store_threads=(4 if store_threads is None else store_threads),
+        load_threads=(4 if load_threads is None else load_threads),
+        bandwidth_limit=bandwidth_limit, tracker=tracker,
+        min_offload_elements=(MIN_OFFLOAD_ELEMENTS
+                              if min_offload_elements is None
+                              else min_offload_elements))
+    return spool, owned
 
 # paper Algorithm 2 line 12: tensors smaller than 2**20 elements stay put
 MIN_OFFLOAD_ELEMENTS = 2 ** 20
@@ -92,6 +133,110 @@ class _Job:
         self.error = None      # exception raised by the worker, if any
 
 
+class SpoolStepTransaction:
+    """Transactional lease on one training step's spool records.
+
+    The spool's raw protocol (offload/keep/prefetch/fetch/drop on string
+    keys) left key construction and drop bookkeeping to every caller —
+    and an exception mid-step leaked every record still live. A
+    transaction owns both: stages are addressed by index, keys are
+    derived once (``{step_id}_s{stage}``, byte-identical to the seed's
+    hand-rolled ``f"mb{mb}_s{si}"``), and closing the transaction drops
+    every record the caller did not consume — on success *and* on
+    exception, so an aborted step never strands blobs on the backend.
+
+        with spool.step(f"mb{mb}") as tx:
+            tx.offload(si, residuals)     # forward
+            ...
+            tx.prefetch(si - 1)           # backward, one module ahead
+            residuals = tx.fetch(si)
+            tx.drop(si)
+    """
+
+    __slots__ = ("_spool", "step_id", "_live", "_closed")
+
+    def __init__(self, spool: "ActivationSpool", step_id: str):
+        self._spool = spool
+        self.step_id = step_id
+        self._live: Dict[Any, str] = {}     # stage -> spool key
+        self._closed = False
+
+    def key(self, stage) -> str:
+        return f"{self.step_id}_s{stage}"
+
+    def _record(self, stage) -> str:
+        if self._closed:
+            raise RuntimeError(
+                f"spool transaction {self.step_id!r} is closed")
+        key = self.key(stage)
+        if stage in self._live:
+            raise KeyError(f"stage {stage!r} already live in step "
+                           f"{self.step_id!r}")
+        self._live[stage] = key
+        return key
+
+    def offload(self, stage, tree) -> None:
+        """Async-store a stage's residual pytree under this lease."""
+        self._spool.offload(self._record(stage), tree)
+
+    def keep(self, stage, tree) -> None:
+        """Record a stage's residuals as kept-in-memory under this
+        lease (same drop/accounting lifecycle as offloaded ones)."""
+        self._spool.keep(self._record(stage), tree)
+
+    def prefetch(self, stage) -> None:
+        """Hint an async load; a stage this lease never recorded is
+        ignored (recompute stages have nothing to load)."""
+        key = self._live.get(stage)
+        if key is not None:
+            self._spool.prefetch(key)
+
+    def fetch(self, stage):
+        """Blocking: the stage's full residual pytree (forwarded from
+        the in-flight store or reloaded from the backend)."""
+        key = self._live.get(stage)
+        if key is None:
+            raise KeyError(f"stage {stage!r} not recorded in step "
+                           f"{self.step_id!r}")
+        return self._spool.fetch(key)
+
+    def peek(self, stage):
+        """Non-consuming fetch: materialize the pytree WITHOUT
+        cancelling a still-queued store, so a later fetch/drop still
+        finds the blob on the backend (checkpoint materialization)."""
+        key = self._live.get(stage)
+        if key is None:
+            raise KeyError(f"stage {stage!r} not recorded in step "
+                           f"{self.step_id!r}")
+        return self._spool.fetch(key, cancel_pending=False)
+
+    def drop(self, stage) -> None:
+        """Consume the stage: free memory and delete the blob."""
+        key = self._live.pop(stage, None)
+        if key is not None:
+            self._spool.drop(key)
+
+    @property
+    def live_stages(self):
+        return sorted(self._live)
+
+    def close(self) -> None:
+        """Drop every record not consumed yet and release the lease.
+        Idempotent; this is the leak-on-exception backstop."""
+        if self._closed:
+            return
+        for stage in list(self._live):
+            self.drop(stage)
+        self._closed = True
+        self._spool._release_step(self.step_id)
+
+    def __enter__(self) -> "SpoolStepTransaction":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+
 class ActivationSpool:
     def __init__(self, backend: Union[str, StorageBackend], *,
                  store_threads: int = 4,
@@ -118,6 +263,10 @@ class ActivationSpool:
         self._store_q: "queue.Queue[_Job]" = queue.Queue()
         self._load_q: "queue.Queue[_Job]" = queue.Queue()
         self._stop = False
+        self._closed = False
+        self._store_threads = store_threads
+        self._load_threads = load_threads
+        self._active_steps: set = set()
         self._threads: List[threading.Thread] = []
         for i in range(store_threads):
             t = threading.Thread(target=self._worker,
@@ -133,6 +282,24 @@ class ActivationSpool:
             self._threads.append(t)
 
     # ------------------------------------------------------------- API
+
+    def step(self, step_id) -> SpoolStepTransaction:
+        """Open a transactional lease for one training step's records
+        (see `SpoolStepTransaction`). At most one live lease per
+        step_id — a collision means the previous step leaked."""
+        if self._closed:
+            raise RuntimeError("spool is closed")
+        step_id = str(step_id)
+        with self._lock:
+            if step_id in self._active_steps:
+                raise RuntimeError(
+                    f"step lease {step_id!r} is already active")
+            self._active_steps.add(step_id)
+        return SpoolStepTransaction(self, step_id)
+
+    def _release_step(self, step_id: str) -> None:
+        with self._lock:
+            self._active_steps.discard(step_id)
 
     def register_parameters(self, params) -> int:
         return self.registry.register_parameters(params)
@@ -217,8 +384,14 @@ class ActivationSpool:
             rec["load_job"] = lj
         self._load_q.put(lj)
 
-    def fetch(self, key):
-        """Blocking: return the full pytree for backward."""
+    def fetch(self, key, *, cancel_pending: bool = True):
+        """Blocking: return the full pytree for backward.
+
+        cancel_pending=False is the non-consuming ("peek") variant: a
+        still-queued store is forwarded but NOT cancelled, so the write
+        still lands and a later consuming fetch finds the blob —
+        required when the caller materializes a record it will fetch
+        again (e.g. checkpointing a spooled optimizer state)."""
         with self._lock:
             rec = self._records.get(key)
             if rec is None:
@@ -227,13 +400,20 @@ class ActivationSpool:
         spooled = None
         if job is not None and rec["spool_idx"]:
             with job.cond:
-                if job.state in (QUEUED, RUNNING):
+                if job.state in (QUEUED, RUNNING) or \
+                        (job.state == CANCELED and job.arrays is not None):
                     # ---- tensor forwarding (§3.3.2): the store has not
-                    # finished; upgrade the in-flight reference. Cancel the
-                    # write if it has not started (§3.3.3 feature 1).
+                    # finished (or was cancelled with its arrays still
+                    # resident — a re-fetch after forwarding); upgrade
+                    # the in-flight reference. Cancel the write if it
+                    # has not started (§3.3.3 feature 1).
                     spooled = job.arrays
-                    self.stats.bytes_forwarded += _nbytes(spooled)
-                    if job.state == QUEUED:
+                    if not rec.get("fwd_counted"):
+                        # a peek-then-fetch (or re-fetch) of one record
+                        # is one forwarding event, not two
+                        rec["fwd_counted"] = True
+                        self.stats.bytes_forwarded += _nbytes(spooled)
+                    if job.state == QUEUED and cancel_pending:
                         job.state = CANCELED
                         self.stats.stores_canceled += 1
                         # memory stays resident; keep tracker entry
@@ -374,11 +554,21 @@ class ActivationSpool:
         return out
 
     def close(self) -> None:
+        """Drain queued I/O, stop and JOIN the worker threads, close the
+        backend. Idempotent — a second close is a no-op, and returning
+        guarantees no worker is still mid-write."""
+        if self._closed:
+            return
+        self._closed = True
         self.wait_io()
         self._stop = True
-        for _ in self._threads:
+        for _ in range(self._store_threads):
             self._store_q.put(None)
+        for _ in range(self._load_threads):
             self._load_q.put(None)
+        for t in self._threads:
+            t.join()
+        self._threads = []
         self.backend.close()
 
     # --------------------------------------------------------- workers

@@ -22,26 +22,31 @@ it, and its cotangents accumulate across stages before flowing back into
 the encoder stages (`enc` is referenced by many scopes but offloaded
 once — the paper's §3.3.1 dedup scenario).
 
-Strategies (the ROK axes of §4.3):
-  "keep"      — residuals stay in memory (tracked for the footprint curve)
-  "offload"   — TBA: async spool to disk
-  "recompute" — layerwise full recomputation: only the module input is
-                kept; backward re-runs the module forward
+Residual placement is decided by an `OffloadPolicy` object
+(`repro.core.policies`, re-exported by `repro.session`) — KeepPolicy /
+SpoolPolicy / RecomputePolicy / AdaptivePolicy are the ROK axes of §4.3.
+The legacy `strategy: str` + `adaptive: bool` kwargs still work as a
+deprecation shim via `resolve_policy`.
+
+Spool access goes through transactional step leases
+(`spool.step(step_id)`): key construction and drop bookkeeping live in
+the transaction, and an exception mid-step drops every still-live
+record instead of leaking blobs on the backend.
 """
 from __future__ import annotations
 
-import os
-import tempfile
+import shutil
 import time
-from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.accounting import MemoryTracker
-from repro.core.adaptive import ModuleProfile, OffloadPlan, plan_offload
-from repro.core.spool import ActivationSpool
+from repro.core.adaptive import ModuleProfile, OffloadPlan
+from repro.core.policies import OffloadPolicy, resolve_policy
+from repro.core.report import StepReport
+from repro.core.spool import build_spool
 from repro.models.api import ModelApi
 from repro.models.layers import rms_norm
 from repro.models.transformer import RunSettings, apply_block
@@ -96,66 +101,53 @@ class _Stage:
         return params, resid
 
 
-@dataclass
-class StepReport:
-    loss: float
-    step_time: float
-    peak_activation_bytes: int
-    backward_begin_bytes: int
-    stats: Any = None
-    plan: Optional[OffloadPlan] = None
+# Back-compat: StepReport used to be defined here; it now lives in
+# repro.core.report as the schema shared by both engines.
+__all__ = ["StagedTrainer", "StepReport"]
 
 
 class StagedTrainer:
     def __init__(self, api: ModelApi, settings: RunSettings, optimizer,
-                 *, strategy: str = "offload",
+                 *, policy: Optional[OffloadPolicy] = None,
+                 strategy: Optional[str] = None,
                  spool_dir: Optional[str] = None,
                  backend=None, io_config=None, codec: Optional[str] = None,
                  store_threads: Optional[int] = None,
                  load_threads: Optional[int] = None,
                  bandwidth_limit: Optional[float] = None,
-                 adaptive: bool = True,
+                 adaptive: Optional[bool] = None,
                  num_microbatches: int = 1,
                  min_offload_elements: Optional[int] = None):
-        assert strategy in ("keep", "offload", "recompute")
         self.api = api
         self.cfg = api.cfg
         self.settings = settings
         self.optimizer = optimizer
-        self.strategy = strategy
-        self.adaptive = adaptive and strategy == "offload"
+        # `strategy`/`adaptive` are the legacy kwargs; resolve_policy
+        # maps them (and the seed defaults) onto a policy object.
+        self.policy = resolve_policy(policy, strategy=strategy,
+                                     adaptive=adaptive)
+        self.strategy = self.policy.strategy      # legacy string view
         self.num_microbatches = num_microbatches
         self.tracker = MemoryTracker()
-        from repro.core.spool import MIN_OFFLOAD_ELEMENTS
-        # Storage selection, most specific wins: an explicit
-        # repro.io.StorageBackend > a declarative SpoolIoConfig > the
-        # seed behavior (filesystem backend in spool_dir / a temp dir).
-        if backend is None and io_config is not None:
-            from repro.io import build_backend
-            io_config.validate()
-            backend = build_backend(io_config, default_dir=spool_dir)
-            # explicit constructor arguments win over the config
-            codec = io_config.codec if codec is None else codec
-            if store_threads is None:
-                store_threads = io_config.store_threads
-            if load_threads is None:
-                load_threads = io_config.load_threads
-            if bandwidth_limit is None:
-                bandwidth_limit = io_config.bandwidth_limit
-        if backend is None:
-            backend = spool_dir or tempfile.mkdtemp(prefix="tba_spool_")
-        self.spool = ActivationSpool(
-            backend, codec=codec,
-            store_threads=(4 if store_threads is None else store_threads),
-            load_threads=(4 if load_threads is None else load_threads),
-            bandwidth_limit=bandwidth_limit, tracker=self.tracker,
-            min_offload_elements=(MIN_OFFLOAD_ELEMENTS
-                                  if min_offload_elements is None
-                                  else min_offload_elements))
-        self.plan: Optional[OffloadPlan] = None
+        self._closed = False
+        self.spool, self._owned_tmpdirs = build_spool(
+            io_config, backend=backend, spool_dir=spool_dir,
+            codec=codec, store_threads=store_threads,
+            load_threads=load_threads, bandwidth_limit=bandwidth_limit,
+            tracker=self.tracker,
+            min_offload_elements=min_offload_elements)
         self._profiles: Optional[List[ModuleProfile]] = None
         self._stages = self._build_stages()
         self._step = 0
+
+    @property
+    def plan(self) -> Optional[OffloadPlan]:
+        return self.policy.plan
+
+    @property
+    def adaptive(self) -> bool:
+        """Legacy view: is the policy profile-driven?"""
+        return self.policy.wants_profile or self.policy.plan is not None
 
     # ------------------------------------------------------ stage chain
 
@@ -271,13 +263,6 @@ class StagedTrainer:
 
     # ------------------------------------------------------------ step
 
-    def _should_offload(self, stage_idx: int) -> bool:
-        if self.strategy != "offload":
-            return False
-        if self.plan is None:
-            return True  # profiling step offloads everything it can
-        return self.plan.offload[stage_idx]
-
     def _args_for(self, stage: _Stage, batch, x, xe, enc):
         if stage.role in ("enc_embed", "vlm_enc", "embed"):
             return (batch,)
@@ -302,116 +287,10 @@ class StagedTrainer:
         bwd_begin_bytes = 0
 
         for mb, batch in enumerate(batches):
-            # ---------------- forward ----------------
-            x = xe = enc = None
-            kept: Dict[int, Any] = {}
-            recompute_in: Dict[int, Any] = {}
-            loss = None
-            for si, stage in enumerate(self._stages):
-                args = self._args_for(stage, batch, x, xe, enc)
-                tin = time.perf_counter()
-                recomputable = (self.strategy == "recompute"
-                                and stage.role in ("layer", "enc_layer"))
-                if recomputable:
-                    out = stage.fn(stage_params[si], *args)
-                    key = f"mb{mb}_s{si}"
-                    recompute_in[si] = args
-                    self.tracker.alloc((key, "k"), _nbytes(args),
-                                       tag=f"ckpt:{key}")
-                    leaves = None
-                else:
-                    out, leaves = stage.fwd(stage_params[si], *args)
-                    if self.adaptive and self.plan is None and mb == 0:
-                        # Profiling step: the first call of every stage
-                        # paid jit compilation, which inflates the
-                        # planner's deadline by orders of magnitude and
-                        # makes it overcommit the store path. Release
-                        # the cold call's buffers (so the footprint is
-                        # not transiently doubled), then re-run warm and
-                        # let `dt` below time that call.
-                        jax.block_until_ready(out)
-                        out = leaves = None
-                        tin = time.perf_counter()
-                        out, leaves = stage.fwd(stage_params[si], *args)
-                if stage.role == "head":
-                    loss = out
-                elif stage.role in ("enc_embed", "enc_layer"):
-                    xe = out
-                    jax.block_until_ready(xe)
-                elif stage.role in ("enc_final", "vlm_enc"):
-                    enc = out
-                    jax.block_until_ready(enc)
-                else:
-                    x = out
-                    jax.block_until_ready(x)
-                dt = time.perf_counter() - tin
-
-                if leaves is not None:
-                    p_leaves, r_leaves = stage.split_leaves(leaves)
-                    key = f"mb{mb}_s{si}"
-                    kept[si] = p_leaves      # params: never offloaded
-                    if self._should_offload(si):
-                        self.spool.offload(key, list(r_leaves.values()))
-                    else:
-                        self.spool.keep(key, list(r_leaves.values()))
-                    profiles[si] = ModuleProfile(
-                        stage.name,
-                        _nbytes(list(r_leaves.values())), dt)
-                    stage.cell.setdefault("resid_idx", tuple(r_leaves))
-                del leaves
-
-            self.tracker.mark(f"backward_begin_mb{mb}")
-            bwd_begin_bytes = max(bwd_begin_bytes, self.tracker.current)
-
-            # ---------------- backward ----------------
-            g = jnp.ones((), jnp.float32)   # d loss
-            mb_grads: List[Any] = [None] * n_stages
-            carry_g = g
-            enc_grad = None
-            for si in range(n_stages - 1, -1, -1):
-                stage = self._stages[si]
-                key = f"mb{mb}_s{si}"
-                if si - 1 > 0:
-                    self.spool.prefetch(f"mb{mb}_s{si - 1}")
-                if si in recompute_in:
-                    outs = stage.bwd_recompute(stage_params[si],
-                                               recompute_in[si], carry_g)
-                    self.tracker.free((key, "k"), tag=f"ckpt_done:{key}")
-                    recompute_in.pop(si)
-                else:
-                    r_list = self.spool.fetch(key)
-                    leaves = [None] * stage.cell["n_leaves"]
-                    for i, l in kept[si].items():
-                        leaves[i] = l
-                    for i, l in zip(stage.cell["resid_idx"], r_list):
-                        leaves[i] = l
-                    outs = stage.bwd(tuple(leaves), carry_g)
-                    jax.block_until_ready(outs[0])
-                    self.spool.drop(key)
-                    kept.pop(si)
-                dp, dargs = outs[0], outs[1:]
-                mb_grads[si] = dp
-                # ---- cotangent routing
-                if stage.role == "head":
-                    carry_g = dargs[0]
-                elif stage.role == "layer":
-                    carry_g = dargs[0]
-                    if stage.takes_enc:
-                        denc = dargs[1]
-                        enc_grad = denc if enc_grad is None else \
-                            jax.tree.map(jnp.add, enc_grad, denc)
-                elif stage.role == "embed":
-                    # decoder stream exhausted; switch to encoder stream
-                    carry_g = enc_grad
-                elif stage.role in ("enc_final", "enc_layer"):
-                    carry_g = dargs[0]
-                # enc_embed / vlm_enc: chain ends
-            loss_total += float(loss)
-            if grads is None:
-                grads = mb_grads
-            else:
-                grads = [jax.tree.map(jnp.add, a, b)
-                         for a, b in zip(grads, mb_grads)]
+            with self.spool.step(f"mb{mb}") as tx:
+                grads, loss_total, bwd_begin_bytes = self._run_microbatch(
+                    tx, mb, batch, stage_params, n_stages, grads,
+                    loss_total, profiles, bwd_begin_bytes)
 
         # ---------------- optimizer ----------------
         grads_tree = self._unstage_grads(grads)
@@ -424,11 +303,12 @@ class StagedTrainer:
         # (§3.3.3) schedules writes to complete inside the backward pass,
         # and any residue overlaps the next step's forward. Only the
         # profiling step drains the queue (to measure write bandwidth).
-        if self.adaptive and self.plan is None and self._step == 0:
+        profiling = self.policy.wants_profile and self._step == 0
+        if profiling:
             self.spool.wait_io()
         step_time = time.perf_counter() - t0
 
-        if self.adaptive and self.plan is None and self._step == 0:
+        if profiling:
             self._profiles = profiles
             # Plan against the backend's measured per-tier bandwidths
             # (a tiered/striped store is not one scalar). The profiling
@@ -436,14 +316,126 @@ class StagedTrainer:
             # with an uncontended burst sized like the largest module.
             max_bytes = max((p.bytes for p in profiles), default=0)
             self.spool.calibrate_backend(min(max_bytes, 8 << 20))
-            self.plan = plan_offload(profiles,
-                                     self.spool.planner_bandwidth())
+            self.policy.on_profile(profiles,
+                                   self.spool.planner_bandwidth())
         self._step += 1
         return params, opt_state, StepReport(
             loss=loss_total / len(batches), step_time=step_time,
             peak_activation_bytes=self.tracker.peak,
             backward_begin_bytes=bwd_begin_bytes,
-            stats=self.spool.stats, plan=self.plan)
+            stats=self.spool.stats, plan=self.plan,
+            step=self._step, engine="staged")
+
+    def _run_microbatch(self, tx, mb, batch, stage_params, n_stages,
+                        grads, loss_total, profiles, bwd_begin_bytes):
+        """Forward + backward for one microbatch under step lease `tx`."""
+        # ---------------- forward ----------------
+        x = xe = enc = None
+        kept: Dict[int, Any] = {}
+        recompute_in: Dict[int, Any] = {}
+        loss = None
+        for si, stage in enumerate(self._stages):
+            args = self._args_for(stage, batch, x, xe, enc)
+            tin = time.perf_counter()
+            if self.policy.recomputes(stage.role):
+                out = stage.fn(stage_params[si], *args)
+                recompute_in[si] = args
+                self.tracker.alloc((tx.key(si), "k"), _nbytes(args),
+                                   tag=f"ckpt:{tx.key(si)}")
+                leaves = None
+            else:
+                out, leaves = stage.fwd(stage_params[si], *args)
+                if self.policy.wants_profile and mb == 0:
+                    # Profiling step: the first call of every stage
+                    # paid jit compilation, which inflates the
+                    # planner's deadline by orders of magnitude and
+                    # makes it overcommit the store path. Release
+                    # the cold call's buffers (so the footprint is
+                    # not transiently doubled), then re-run warm and
+                    # let `dt` below time that call.
+                    jax.block_until_ready(out)
+                    out = leaves = None
+                    tin = time.perf_counter()
+                    out, leaves = stage.fwd(stage_params[si], *args)
+            if stage.role == "head":
+                loss = out
+            elif stage.role in ("enc_embed", "enc_layer"):
+                xe = out
+                jax.block_until_ready(xe)
+            elif stage.role in ("enc_final", "vlm_enc"):
+                enc = out
+                jax.block_until_ready(enc)
+            else:
+                x = out
+                jax.block_until_ready(x)
+            dt = time.perf_counter() - tin
+
+            if leaves is not None:
+                p_leaves, r_leaves = stage.split_leaves(leaves)
+                kept[si] = p_leaves      # params: never offloaded
+                profile = ModuleProfile(
+                    stage.name, _nbytes(list(r_leaves.values())), dt)
+                if self.policy.should_offload(si, profile):
+                    tx.offload(si, list(r_leaves.values()))
+                else:
+                    tx.keep(si, list(r_leaves.values()))
+                profiles[si] = profile
+                stage.cell.setdefault("resid_idx", tuple(r_leaves))
+            del leaves
+
+        self.tracker.mark(f"backward_begin_{tx.step_id}")
+        bwd_begin_bytes = max(bwd_begin_bytes, self.tracker.current)
+
+        # ---------------- backward ----------------
+        g = jnp.ones((), jnp.float32)   # d loss
+        mb_grads: List[Any] = [None] * n_stages
+        carry_g = g
+        enc_grad = None
+        for si in range(n_stages - 1, -1, -1):
+            stage = self._stages[si]
+            if si - 1 > 0:
+                tx.prefetch(si - 1)
+            if si in recompute_in:
+                outs = stage.bwd_recompute(stage_params[si],
+                                           recompute_in[si], carry_g)
+                self.tracker.free((tx.key(si), "k"),
+                                  tag=f"ckpt_done:{tx.key(si)}")
+                recompute_in.pop(si)
+            else:
+                r_list = tx.fetch(si)
+                leaves = [None] * stage.cell["n_leaves"]
+                for i, l in kept[si].items():
+                    leaves[i] = l
+                for i, l in zip(stage.cell["resid_idx"], r_list):
+                    leaves[i] = l
+                outs = stage.bwd(tuple(leaves), carry_g)
+                jax.block_until_ready(outs[0])
+                tx.drop(si)
+                kept.pop(si)
+            dp, dargs = outs[0], outs[1:]
+            mb_grads[si] = dp
+            # ---- cotangent routing
+            if stage.role == "head":
+                carry_g = dargs[0]
+            elif stage.role == "layer":
+                carry_g = dargs[0]
+                if stage.takes_enc:
+                    denc = dargs[1]
+                    enc_grad = denc if enc_grad is None else \
+                        jax.tree.map(jnp.add, enc_grad, denc)
+            elif stage.role == "embed":
+                # decoder stream exhausted; switch to encoder stream
+                carry_g = enc_grad
+            elif stage.role in ("enc_final", "enc_layer"):
+                carry_g = dargs[0]
+            # enc_embed / vlm_enc: chain ends
+        loss_total += float(loss)
+        if grads is None:
+            grads = mb_grads
+        else:
+            grads = [jax.tree.map(jnp.add, a, b)
+                     for a, b in zip(grads, mb_grads)]
+        return grads, loss_total, bwd_begin_bytes
 
     def _unstage_grads(self, grads: List[Any]):
         """Reassemble per-stage grads into the model params structure
@@ -480,4 +472,12 @@ class StagedTrainer:
         return out
 
     def close(self):
+        """Idempotent: drain + join the spool, then remove any spool
+        directories this trainer created (the seed leaked its
+        `tba_spool_*` temp dirs)."""
+        if self._closed:
+            return
+        self._closed = True
         self.spool.close()
+        for d in self._owned_tmpdirs:
+            shutil.rmtree(d, ignore_errors=True)

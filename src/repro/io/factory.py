@@ -36,12 +36,27 @@ def parse_bytes(text: str) -> int:
     return int(float(s))
 
 
-def _default_dir(base_dir: Optional[str]) -> str:
-    return base_dir or tempfile.mkdtemp(prefix="tba_spool_")
+def _default_dir(base_dir: Optional[str],
+                 created: Optional[List[str]] = None) -> str:
+    if base_dir:
+        return base_dir
+    d = tempfile.mkdtemp(prefix="tba_spool_")
+    if created is not None:
+        created.append(d)
+    return d
 
 
 def _stripe_dirs(base: str, n: int) -> List[str]:
     return [os.path.join(base, f"stripe{i}") for i in range(n)]
+
+
+def _own_tmpdirs(backend: StorageBackend,
+                 created: List[str]) -> StorageBackend:
+    # Temp dirs the factory invented (no user-named directory) are the
+    # caller's to remove on close — advertise them so StagedTrainer /
+    # TrainSession can clean up instead of leaking tba_spool_* dirs.
+    backend.owned_tmpdirs = tuple(created)
+    return backend
 
 
 def backend_from_spec(spec: str, *,
@@ -52,28 +67,35 @@ def backend_from_spec(spec: str, *,
         kind, _, n = kind.partition("@")
         rest = f"@{n}"
     get_backend_cls(kind)                 # fail fast on unknown kinds
+    created: List[str] = []
     if kind == "fs":
-        return FilesystemBackend(rest or _default_dir(base_dir))
+        return _own_tmpdirs(
+            FilesystemBackend(rest or _default_dir(base_dir, created)),
+            created)
     if kind == "mem":
         return HostMemoryBackend()
     if kind == "striped":
         if rest.startswith("@"):
-            dirs = _stripe_dirs(_default_dir(base_dir), int(rest[1:]))
+            dirs = _stripe_dirs(_default_dir(base_dir, created),
+                                int(rest[1:]))
         elif "@" in rest:
             base, _, n = rest.rpartition("@")
             dirs = _stripe_dirs(base, int(n))
         elif rest:
             dirs = [d for d in rest.split(",") if d]
         else:
-            dirs = _stripe_dirs(_default_dir(base_dir), 2)
-        return StripedBackend(dirs)
+            dirs = _stripe_dirs(_default_dir(base_dir, created), 2)
+        return _own_tmpdirs(StripedBackend(dirs), created)
     if kind == "tiered":
         budget, _, lower_spec = rest.partition(",")
         if not budget:
             raise ValueError("tiered spec needs a RAM budget, e.g. "
                              "'tiered:64mb'")
         lower = backend_from_spec(lower_spec or "fs", base_dir=base_dir)
-        return TieredBackend(lower, capacity_bytes=parse_bytes(budget))
+        created += list(getattr(lower, "owned_tmpdirs", ()))
+        return _own_tmpdirs(
+            TieredBackend(lower, capacity_bytes=parse_bytes(budget)),
+            created)
     raise ValueError(f"unhandled backend spec {spec!r}")
 
 
@@ -83,19 +105,22 @@ def build_backend(io_cfg, *,
     (duck-typed so `repro.io` stays import-independent of configs)."""
     kind = io_cfg.backend
     get_backend_cls(kind)
+    created: List[str] = []
 
     def directory() -> str:
         # resolved lazily: only the branches that actually store to a
         # directory may mkdtemp one
-        return io_cfg.directory or _default_dir(default_dir)
+        return io_cfg.directory or _default_dir(default_dir, created)
 
     if kind == "mem":
         return HostMemoryBackend()
     if kind == "fs":
-        return FilesystemBackend(directory())
+        return _own_tmpdirs(FilesystemBackend(directory()), created)
     if kind == "striped":
         dirs = list(io_cfg.stripe_dirs) or _stripe_dirs(directory(), 2)
-        return StripedBackend(dirs, chunk_bytes=io_cfg.stripe_chunk_bytes)
+        return _own_tmpdirs(
+            StripedBackend(dirs, chunk_bytes=io_cfg.stripe_chunk_bytes),
+            created)
     if kind == "tiered":
         if io_cfg.stripe_dirs:
             lower: StorageBackend = StripedBackend(
@@ -103,6 +128,8 @@ def build_backend(io_cfg, *,
                 chunk_bytes=io_cfg.stripe_chunk_bytes)
         else:
             lower = FilesystemBackend(directory())
-        return TieredBackend(lower,
-                             capacity_bytes=io_cfg.host_mem_budget_bytes)
+        return _own_tmpdirs(
+            TieredBackend(lower,
+                          capacity_bytes=io_cfg.host_mem_budget_bytes),
+            created)
     raise ValueError(f"unhandled backend kind {kind!r}")

@@ -76,6 +76,24 @@ def build_settings(cfg: ModelConfig, mesh, axes: MeshAxes, *, kind: str,
         ce_chunk=ce_chunk if kind == "train" else 0)
 
 
+def make_host_train_step(api: ModelApi, optimizer: Optimizer,
+                         settings: RunSettings) -> Callable:
+    """Whole-step jitted train step for the single-host jit engine (no
+    mesh plumbing) — shared by `repro.session.TrainSession` and
+    `repro.launch.train`. Signature matches what TrainLoop drives:
+    (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        (_, metrics), grads = jax.value_and_grad(
+            api.loss, has_aux=True)(params, batch, settings)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return step_fn
+
+
 @dataclass
 class StepBundle:
     fn: Callable                  # jit-able step function

@@ -1,14 +1,17 @@
 """End-to-end training driver (deliverable b).
 
-Two execution paths, selected by --engine:
+Both execution paths now route through `repro.session.TrainSession`,
+selected by --engine:
 
-  jit     — whole-step jax.jit training (single host here; the same
-            step builders drive the 256/512-chip dry-run), wrapped in the
-            fault-tolerant TrainLoop (async checkpoints, preemption trap,
-            straggler watchdog, resume).
+  jit     — whole-step jax.jit training wrapped in the fault-tolerant
+            TrainLoop (async checkpoints, preemption trap, straggler
+            watchdog, resume). With --host-offload, the optimizer state
+            is staged through the SpoolIoConfig-selected backend between
+            steps, so both engines share backend/codec selection.
   staged  — the TBA host-staged trainer (core/staged.py): per-module
             jitted stages with the ActivationSpool offloading real
-            residuals to real disk, adaptive offloading enabled. This is
+            residuals to real disk, placement decided by an
+            OffloadPolicy (--strategy maps onto policy objects). This is
             the paper's runnable path on this container.
 
 Examples:
@@ -16,45 +19,17 @@ Examples:
       --steps 300 --batch 8 --seq 256 --engine jit --ckpt /tmp/ck
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b:reduced \
       --steps 20 --engine staged --strategy offload
+  PYTHONPATH=src python -m repro.launch.train --engine jit \
+      --spool-backend mem --host-offload --steps 20
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
 import time
 
-import jax
-import numpy as np
-
-from repro.configs import ARCH_IDS, get_config, reduced
-from repro.configs.paper_models import gpt, small_bert, small_gpt
-from repro.data.pipeline import ShardedLoader, SyntheticMarkovLM
-from repro.models.api import build_model
-from repro.models.transformer import RunSettings
-from repro.optim.optimizers import adamw, sgd
-from repro.runtime.trainer import StragglerWatchdog, TrainLoop, TrainState
-
-
-def resolve_config(name: str):
-    """--arch accepts: assigned ids, '<id>:reduced', gpt-124m,
-    small-gpt/small-bert, or gpt-h<H>-l<L>."""
-    if name == "gpt-124m":
-        return dataclasses.replace(
-            gpt(768, 12, vocab=32768), num_heads=12, num_kv_heads=12,
-            head_dim=64)
-    if name == "small-gpt":
-        return small_gpt()
-    if name == "small-bert":
-        return small_bert()
-    if name.endswith(":reduced"):
-        return reduced(get_config(name[:-len(":reduced")]))
-    if name in ARCH_IDS:
-        return get_config(name)
-    if name.startswith("gpt-h"):
-        h, l = name[5:].split("-l")
-        return gpt(int(h), int(l))
-    raise SystemExit(f"unknown --arch {name!r}")
+from repro.configs.base import SpoolIoConfig
+from repro.session import TrainSession, resolve_config  # noqa: F401
+# resolve_config is re-exported for back-compat: it used to live here.
 
 
 def main() -> None:
@@ -62,8 +37,11 @@ def main() -> None:
     ap.add_argument("--arch", default="small-gpt")
     ap.add_argument("--engine", choices=["jit", "staged"], default="jit")
     ap.add_argument("--strategy", default="offload",
-                    choices=["keep", "offload", "recompute"],
-                    help="staged engine: ROK placement strategy")
+                    choices=["keep", "offload", "recompute", "adaptive",
+                             "spool"],
+                    help="staged engine: offload policy (maps onto "
+                         "repro.session policy objects; 'offload' keeps "
+                         "the seed meaning, adaptive planning)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
@@ -77,107 +55,91 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--min-offload", type=int, default=None,
-                    help="staged engine: min elements to offload "
+                    help="min elements to offload through the spool "
                          "(default: paper's 2**20)")
     ap.add_argument("--spool-backend", default="fs",
                     choices=["fs", "striped", "mem", "tiered"],
-                    help="staged engine: storage backend for the "
-                         "activation spool (repro.io)")
+                    help="storage backend for the activation spool "
+                         "(repro.io); honored by BOTH engines")
     ap.add_argument("--spool-dir", default=None,
-                    help="spool directory (default: fresh temp dir)")
+                    help="spool directory (default: fresh temp dir, "
+                         "removed on close)")
     ap.add_argument("--stripe-dirs", default=None,
                     help="comma-separated stripe directories for "
                          "--spool-backend striped/tiered (default: 2 "
                          "subdirs of the spool dir)")
     ap.add_argument("--codec", default="raw", choices=["raw", "zlib"],
-                    help="payload codec for spooled residuals")
+                    help="payload codec for spooled payloads")
     ap.add_argument("--host-mem-budget-mb", type=int, default=256,
                     help="tiered backend: host-RAM tier budget in MiB")
+    ap.add_argument("--host-offload", action="store_true",
+                    help="jit engine: stage the optimizer state through "
+                         "the spool backend between steps")
     args = ap.parse_args()
 
-    cfg = resolve_config(args.arch)
-    if jax.device_count() == 1 and cfg.num_layers > 16:
-        print("note: full-size config on one CPU device — consider "
-              "'<arch>:reduced'")
-    api = build_model(cfg)
-    opt = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
-    source = SyntheticMarkovLM(cfg.vocab_size, seed=args.seed)
-    loader = ShardedLoader(source, global_batch=args.batch,
-                           seq_len=args.seq)
+    stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
+                        if d)
+    io = SpoolIoConfig(
+        backend=args.spool_backend, directory=args.spool_dir,
+        stripe_dirs=stripe_dirs, codec=args.codec,
+        host_mem_budget_bytes=args.host_mem_budget_mb << 20,
+        host_offload="opt_state" if args.host_offload else "none")
 
-    params = api.init(jax.random.key(args.seed))
-    n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M engine={args.engine}")
+    # the context manager guarantees teardown (worker-thread join, temp
+    # spool/ckpt dir removal) on exceptions and Ctrl-C too
+    with TrainSession(
+            args.arch, engine=args.engine,
+            policy=args.strategy if args.engine == "staged" else None,
+            io=io, optimizer=args.optimizer, lr=args.lr,
+            batch_size=args.batch, seq_len=args.seq, seed=args.seed,
+            microbatches=args.microbatches,
+            ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+            metrics_path=args.metrics, spool_dir=args.spool_dir,
+            min_offload_elements=args.min_offload,
+            install_signal_handlers=(args.engine == "jit")) as session:
 
-    if args.engine == "staged":
-        from repro.configs.base import SpoolIoConfig
-        from repro.core.staged import StagedTrainer
-        settings = RunSettings(attn_impl="xla", attn_chunk=256,
-                               param_dtype=cfg.dtype)
-        stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
-                            if d)
-        io_config = SpoolIoConfig(
-            backend=args.spool_backend, directory=args.spool_dir,
-            stripe_dirs=stripe_dirs, codec=args.codec,
-            host_mem_budget_bytes=args.host_mem_budget_mb << 20)
-        trainer = StagedTrainer(api, settings, opt,
-                                strategy=args.strategy,
-                                spool_dir=args.spool_dir,
-                                io_config=io_config,
-                                min_offload_elements=args.min_offload)
-        print(f"spool backend={args.spool_backend} codec={args.codec}")
-        opt_state = opt.init(params)
-        for step in range(args.steps):
-            batches = [next(loader) for _ in range(args.microbatches)]
-            params, opt_state, rep = trainer.train_step(params, opt_state,
-                                                        batches)
-            print(f"step {step:4d} loss {rep.loss:.4f} "
-                  f"t {rep.step_time:.2f}s "
-                  f"act_peak {rep.peak_activation_bytes/1e6:.1f} MB "
-                  f"offloaded {rep.stats.bytes_offloaded/1e6:.1f} MB",
-                  flush=True)
-        bk = trainer.spool.backend
-        io = bk.stats
-        if io.num_writes:
-            print(f"backend[{bk.kind}] wrote {io.bytes_written/1e6:.1f} MB"
-                  f" @ {io.write_bandwidth/1e9:.2f} GB/s, read "
-                  f"{io.bytes_read/1e6:.1f} MB", flush=True)
-        if hasattr(bk, "per_device_write_bytes"):
-            per_dev = bk.per_device_write_bytes()
-            print("stripe write balance:",
-                  [f"{b/1e6:.1f}MB" for b in per_dev], flush=True)
-        trainer.close()
-        return
+        print(f"arch={session.cfg.name} "
+              f"params={session.n_params/1e6:.1f}M engine={args.engine}")
+        if session.cfg.num_layers > 16:
+            import jax
+            if jax.device_count() == 1:
+                print("note: full-size config on one CPU device — "
+                      "consider '<arch>:reduced'")
+        if session.spool is not None:
+            print(f"spool backend={args.spool_backend} "
+                  f"codec={args.codec}")
 
-    settings = RunSettings(attn_impl="xla", attn_chunk=256,
-                           activation_policy="remat",
-                           param_dtype=cfg.dtype)
+        def on_report(rep):
+            if args.engine == "staged":
+                print(f"step {rep.step - 1:4d} loss {rep.loss:.4f} "
+                      f"t {rep.step_time:.2f}s "
+                      f"act_peak {rep.peak_activation_bytes/1e6:.1f} MB "
+                      f"offloaded {rep.stats.bytes_offloaded/1e6:.1f} MB",
+                      flush=True)
 
-    @jax.jit
-    def step_fn(params, opt_state, batch):
-        batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-        (_, metrics), grads = jax.value_and_grad(
-            api.loss, has_aux=True)(params, batch, settings)
-        params, opt_state = opt.update(grads, opt_state, params)
-        return params, opt_state, metrics
+        t0 = time.time()
+        result = session.run(args.steps, resume=args.resume,
+                             on_report=on_report)
+        dt = time.time() - t0
 
-    loop = TrainLoop(
-        step_fn=step_fn,
-        init_state=TrainState(0, params, opt.init(params)),
-        loader=loader, ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
-        metrics_path=args.metrics,
-        watchdog=StragglerWatchdog(),
-        install_signal_handlers=True)
-    if args.resume and loop.resume():
-        print(f"resumed from step {loop.state.step}")
-
-    t0 = time.time()
-    final = loop.run(args.steps)
-    dt = time.time() - t0
-    print(f"done: {final.step} steps in {dt:.1f}s "
-          f"({args.steps and dt/args.steps:.2f}s/step); "
-          f"stragglers flagged: {len(loop.watchdog.flagged)}")
-    loop.close()
+        if session.spool is not None:
+            bk = session.spool.backend
+            io_stats = bk.stats
+            if io_stats.num_writes:
+                print(f"backend[{bk.kind}] wrote "
+                      f"{io_stats.bytes_written/1e6:.1f} MB @ "
+                      f"{io_stats.write_bandwidth/1e9:.2f} GB/s, read "
+                      f"{io_stats.bytes_read/1e6:.1f} MB", flush=True)
+            if hasattr(bk, "per_device_write_bytes"):
+                per_dev = bk.per_device_write_bytes()
+                print("stripe write balance:",
+                      [f"{b/1e6:.1f}MB" for b in per_dev], flush=True)
+        if args.engine == "jit":
+            flagged = (len(session.watchdog.flagged)
+                       if session.watchdog else 0)
+            print(f"done: {result.state.step} steps in {dt:.1f}s "
+                  f"({args.steps and dt/args.steps:.2f}s/step); "
+                  f"stragglers flagged: {flagged}")
 
 
 if __name__ == "__main__":

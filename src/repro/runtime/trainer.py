@@ -12,7 +12,15 @@ Responsibilities (the ones a 1000-node fleet actually needs):
     repair/reschedule controller; here the hook is unit-tested directly);
   * elastic restart — restore() takes the *current* mesh's shardings, so
     a checkpoint taken on one topology restores onto another;
-  * metrics — JSONL lines per step (loss, step time, tokens/s).
+  * metrics — JSONL lines per step (loss, step time, tokens/s);
+  * host offload — with an `ActivationSpool` attached (built from a
+    `SpoolIoConfig` by `TrainSession`), the optimizer state is staged
+    through the spool's storage backend between steps: offloaded
+    asynchronously after the update, fetched (with tensor forwarding)
+    just before the next one. Both engines thereby share backend/codec
+    selection — the jit engine's whole-step XLA program cannot hand
+    per-module residuals to the spool, so its offloadable host state is
+    what lives *between* steps (10Cache-style optimizer-state tiering).
 """
 from __future__ import annotations
 
@@ -28,7 +36,8 @@ import numpy as np
 
 import jax
 
-from repro.ckpt.checkpoint import CheckpointManager
+from repro.ckpt.checkpoint import (CheckpointManager, restore_train_state,
+                                   save_train_state)
 
 
 @dataclass
@@ -70,6 +79,10 @@ class TrainLoop:
                  keep_last: int = 3, metrics_path: Optional[str] = None,
                  watchdog: Optional[StragglerWatchdog] = None,
                  shardings: Any = None,
+                 spool: Any = None,
+                 host_offload: bool = False,
+                 on_step: Optional[Callable[[int, float, Any, Any],
+                                            None]] = None,
                  install_signal_handlers: bool = False):
         self.step_fn = step_fn
         self.state = init_state
@@ -79,6 +92,12 @@ class TrainLoop:
         self.metrics_path = metrics_path
         self.watchdog = watchdog or StragglerWatchdog()
         self.shardings = shardings
+        # host offload (opt-state tiering): the spool is owned by the
+        # caller (TrainSession); the loop only leases per-step records.
+        self.spool = spool
+        self.host_offload = bool(host_offload) and spool is not None
+        self.on_step = on_step
+        self._opt_tx = None          # live SpoolStepTransaction, if any
         self._preempted = False
         self._metrics_f = open(metrics_path, "a") if metrics_path else None
         if install_signal_handlers:
@@ -97,36 +116,51 @@ class TrainLoop:
         """Test hook: simulate the scheduler's SIGTERM."""
         self._preempted = True
 
+    # ----------------------------------------------- host offload (jit)
+
+    def _acquire_opt_state(self):
+        """The optimizer state, fetched back from the spool if the
+        previous step staged it out (forwarding applies: a store still
+        in flight is upgraded in memory, not re-read)."""
+        if self._opt_tx is None:
+            return self.state.opt_state
+        tx, self._opt_tx = self._opt_tx, None
+        opt_state = tx.fetch(0)
+        tx.close()                  # drops the record + deletes the blob
+        return opt_state
+
+    def _stage_opt_state(self, opt_state, step: int):
+        """Async-offload the fresh optimizer state through the spool;
+        returns what TrainState should hold (None while spooled — the
+        spool owns the only strong reference until the next acquire)."""
+        if not self.host_offload:
+            return opt_state
+        tx = self.spool.step(f"opt{step}")
+        tx.offload(0, opt_state)
+        self._opt_tx = tx
+        return None
+
     # ------------------------------------------------------- checkpoints
 
     def _save(self, final: bool = False):
-        tree = {"params": self.state.params,
-                "opt_state": self.state.opt_state}
-        meta = {"data": self.loader.state_dict()
-                if hasattr(self.loader, "state_dict") else {},
-                "final": final}
-        self.ckpt.save(self.state.step, tree, metadata=meta)
-        if final:
-            self.ckpt.wait()
+        opt_state = self.state.opt_state
+        if opt_state is None and self._opt_tx is not None:
+            # staged out between steps: materialize non-consumingly —
+            # peek() must not cancel the queued store, or the next
+            # step's fetch would find neither arrays nor blob
+            opt_state = self._opt_tx.peek(0)
+        save_train_state(self.ckpt, self.state.step, self.state.params,
+                         opt_state, self.loader, final=final)
 
     def resume(self) -> bool:
         """Restore the latest checkpoint if present. Returns True if
         restored. Reshards onto the current mesh via self.shardings."""
-        step = self.ckpt.latest_step()
-        if step is None:
+        restored = restore_train_state(
+            self.ckpt, self.state.params, self.state.opt_state,
+            self.loader, shardings=self.shardings)
+        if restored is None:
             return False
-        like = {"params": self.state.params,
-                "opt_state": self.state.opt_state}
-        like = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
-            if hasattr(x, "shape") else x, like)
-        restored, manifest = self.ckpt.restore(like, step=step,
-                                               shardings=self.shardings)
-        self.state = TrainState(step=step, params=restored["params"],
-                                opt_state=restored["opt_state"])
-        if hasattr(self.loader, "load_state_dict") and \
-                manifest["metadata"].get("data"):
-            self.loader.load_state_dict(manifest["metadata"]["data"])
+        self.state = TrainState(*restored)
         return True
 
     # ------------------------------------------------------------- loop
@@ -138,15 +172,24 @@ class TrainLoop:
             batch = next(it)
             t0 = time.perf_counter()
             params, opt_state, metrics = self.step_fn(
-                self.state.params, self.state.opt_state, batch)
+                self.state.params, self._acquire_opt_state(), batch)
             jax.block_until_ready(jax.tree.leaves(params)[0])
             dt = time.perf_counter() - t0
+            opt_state = self._stage_opt_state(opt_state,
+                                              self.state.step + 1)
             self.state = TrainState(self.state.step + 1, params, opt_state)
             self.watchdog.record(self.state.step, dt)
             self._log(metrics, dt, batch)
+            if self.on_step:
+                self.on_step(self.state.step, dt, metrics, batch)
             if self.ckpt_every and \
                     self.state.step % self.ckpt_every == 0:
                 self._save()
+        # rematerialize a staged-out optimizer state before the final
+        # checkpoint / before handing the state back
+        if self._opt_tx is not None:
+            self.state = TrainState(self.state.step, self.state.params,
+                                    self._acquire_opt_state())
         self._save(final=True)
         return self.state
 
@@ -168,6 +211,9 @@ class TrainLoop:
         self._metrics_f.flush()
 
     def close(self):
+        if self._opt_tx is not None:
+            self._opt_tx.close()
+            self._opt_tx = None
         if self._metrics_f:
             self._metrics_f.close()
         self.ckpt.wait()

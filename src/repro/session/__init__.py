@@ -1,0 +1,30 @@
+"""repro.session — the unified training front door.
+
+One import surface for everything a training driver needs:
+
+    from repro.session import TrainSession, AdaptivePolicy, SpoolIoConfig
+
+    with TrainSession("small-gpt", engine="staged",
+                      policy=AdaptivePolicy(),
+                      io=SpoolIoConfig(backend="striped")) as sess:
+        result = sess.run(100)
+
+`TrainSession` owns config resolution, engine selection (staged | jit),
+the ActivationSpool, checkpointing, and metrics; `OffloadPolicy` objects
+replace the legacy `strategy: str` + `adaptive: bool` kwargs (which
+still work everywhere as deprecation shims).
+"""
+from repro.configs.base import SpoolIoConfig
+from repro.core.policies import (AdaptivePolicy, KeepPolicy,
+                                 OffloadPolicy, RecomputePolicy,
+                                 SpoolPolicy, resolve_policy)
+from repro.core.report import StepReport
+from repro.session.session import (ENGINES, SessionResult, TrainSession,
+                                   resolve_config)
+
+__all__ = [
+    "TrainSession", "SessionResult", "ENGINES", "resolve_config",
+    "OffloadPolicy", "KeepPolicy", "SpoolPolicy", "RecomputePolicy",
+    "AdaptivePolicy", "resolve_policy",
+    "StepReport", "SpoolIoConfig",
+]

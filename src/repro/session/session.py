@@ -1,0 +1,356 @@
+"""TrainSession — one front door for both training engines.
+
+The paper's interoperability claim (SSDTrain plugs into any framework
+behind one hook-based API) maps here to a single facade that owns:
+
+  * config resolution      — arch strings ("small-gpt", "qwen2.5-3b:reduced",
+                             "gpt-h256-l4") or a ModelConfig
+  * engine selection       — "staged" (per-module TBA path, real spool I/O)
+                             or "jit" (whole-step XLA, fault-tolerant loop)
+  * placement policy       — an `OffloadPolicy` object (staged engine)
+  * the ActivationSpool    — built from one `SpoolIoConfig` for EITHER
+                             engine: the staged engine spools per-module
+                             residuals, the jit engine stages optimizer
+                             state between steps (`io.host_offload`)
+  * checkpointing          — periodic async checkpoints + resume
+  * metrics                — one unified `StepReport` stream / JSONL
+                             schema regardless of engine
+
+    with TrainSession("small-gpt", engine="staged",
+                      policy=AdaptivePolicy()) as sess:
+        result = sess.run(100)
+    print(result.final_loss)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import tempfile
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Union
+
+import numpy as np
+
+import jax
+
+from repro.ckpt.checkpoint import (CheckpointManager, restore_train_state,
+                                   save_train_state)
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.configs.base import ModelConfig, SpoolIoConfig
+from repro.configs.paper_models import gpt, small_bert, small_gpt
+from repro.core.policies import OffloadPolicy, resolve_policy
+from repro.core.report import StepReport
+from repro.core.spool import build_spool
+from repro.core.staged import StagedTrainer
+from repro.data.pipeline import ShardedLoader, SyntheticMarkovLM
+from repro.launch.steps import make_host_train_step
+from repro.models.api import build_model
+from repro.models.transformer import RunSettings
+from repro.optim.optimizers import Optimizer, adamw, sgd
+from repro.runtime.trainer import (StragglerWatchdog, TrainLoop,
+                                   TrainState)
+
+ENGINES = ("staged", "jit")
+
+
+def resolve_config(name: str) -> ModelConfig:
+    """Arch string -> ModelConfig. Accepts: assigned ids, '<id>:reduced',
+    gpt-124m, small-gpt/small-bert, or gpt-h<H>-l<L>."""
+    if name == "gpt-124m":
+        return dataclasses.replace(
+            gpt(768, 12, vocab=32768), num_heads=12, num_kv_heads=12,
+            head_dim=64)
+    if name == "small-gpt":
+        return small_gpt()
+    if name == "small-bert":
+        return small_bert()
+    if name.endswith(":reduced"):
+        return reduced(get_config(name[:-len(":reduced")]))
+    if name in ARCH_IDS:
+        return get_config(name)
+    if name.startswith("gpt-h"):
+        h, l = name[5:].split("-l")
+        return gpt(int(h), int(l))
+    raise ValueError(f"unknown arch {name!r}")
+
+
+def _resolve_optimizer(optimizer: Union[str, Optimizer],
+                       lr: float) -> Optimizer:
+    if isinstance(optimizer, Optimizer):
+        return optimizer
+    if optimizer == "adamw":
+        return adamw(lr)
+    if optimizer == "sgd":
+        return sgd(lr)
+    raise ValueError(f"unknown optimizer {optimizer!r}")
+
+
+def _batch_tokens(batch) -> int:
+    if isinstance(batch, dict) and "tokens" in batch:
+        return int(np.prod(batch["tokens"].shape))
+    return 0
+
+
+@dataclass
+class SessionResult:
+    """What a `TrainSession.run` hands back."""
+    engine: str
+    state: TrainState
+    reports: List[StepReport] = field(default_factory=list)
+
+    @property
+    def losses(self) -> List[float]:
+        return [r.loss for r in self.reports]
+
+    @property
+    def final_loss(self) -> float:
+        return self.reports[-1].loss if self.reports else float("nan")
+
+
+class TrainSession:
+    """Facade over the staged (TBA) and jit engines; see module docstring.
+
+    Every knob that used to be an engine-specific kwarg is one argument
+    here, interpreted identically for both engines wherever it applies.
+    """
+
+    def __init__(self, arch: Union[str, ModelConfig] = "small-gpt", *,
+                 engine: str = "staged",
+                 policy: Union[OffloadPolicy, str, None] = None,
+                 io: Optional[SpoolIoConfig] = None,
+                 optimizer: Union[str, Optimizer] = "adamw",
+                 lr: float = 3e-4,
+                 batch_size: int = 8, seq_len: int = 256,
+                 seed: int = 0, microbatches: int = 1,
+                 settings: Optional[RunSettings] = None,
+                 loader: Any = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 keep_last: int = 3,
+                 metrics_path: Optional[str] = None,
+                 spool_dir: Optional[str] = None,
+                 min_offload_elements: Optional[int] = None,
+                 install_signal_handlers: bool = False):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"expected one of {ENGINES}")
+        if engine == "jit" and policy is not None:
+            raise ValueError(
+                "OffloadPolicy applies to the staged engine; the jit "
+                "engine fixes activation placement at trace time "
+                "(RunSettings.activation_policy) and uses io.host_offload "
+                "for between-step spooling")
+        self.engine = engine
+        self.cfg = (resolve_config(arch) if isinstance(arch, str)
+                    else arch.validate())
+        self.io = io.validate() if io is not None else None
+        self.api = build_model(self.cfg)
+        self.optimizer = _resolve_optimizer(optimizer, lr)
+        self.seed = seed
+        self.microbatches = microbatches
+        self.metrics_path = metrics_path
+        self.ckpt_every = ckpt_every
+        self.keep_last = keep_last
+        self.install_signal_handlers = install_signal_handlers
+        self.reports: List[StepReport] = []
+        self._metrics_f = None
+        self._state: Optional[TrainState] = None
+        self._loop: Optional[TrainLoop] = None
+        self._owned_tmpdirs: List[str] = []
+        self._closed = False
+
+        if loader is None:
+            loader = ShardedLoader(
+                SyntheticMarkovLM(self.cfg.vocab_size, seed=seed),
+                global_batch=batch_size, seq_len=seq_len)
+        self.loader = loader
+        self._loader_iter = None
+
+        if ckpt_dir is None:
+            # the jit engine's TrainLoop always commits a final
+            # checkpoint; park it somewhere we clean up
+            ckpt_dir = tempfile.mkdtemp(prefix="session_ckpt_")
+            self._owned_tmpdirs.append(ckpt_dir)
+        self.ckpt_dir = ckpt_dir
+
+        if engine == "staged":
+            self.policy = resolve_policy(policy)
+            self.settings = settings or RunSettings(
+                attn_impl="xla", attn_chunk=256,
+                param_dtype=self.cfg.dtype)
+            self.trainer = StagedTrainer(
+                self.api, self.settings, self.optimizer,
+                policy=self.policy, io_config=self.io,
+                spool_dir=spool_dir,
+                num_microbatches=microbatches,
+                min_offload_elements=min_offload_elements)
+            self.spool = self.trainer.spool
+            self._ckpt = CheckpointManager(ckpt_dir, keep_last=keep_last)
+        else:
+            self.policy = None
+            self.trainer = None
+            self._ckpt = None       # TrainLoop owns its manager
+            self.settings = settings or RunSettings(
+                attn_impl="xla", attn_chunk=256,
+                activation_policy="remat", param_dtype=self.cfg.dtype)
+            self._step_fn = make_host_train_step(
+                self.api, self.optimizer, self.settings)
+            self.spool = None
+            if self.io is not None and self.io.host_offload != "none":
+                self.spool, owned = build_spool(
+                    self.io, spool_dir=spool_dir,
+                    min_offload_elements=min_offload_elements)
+                self._owned_tmpdirs += owned
+
+    # ------------------------------------------------------------ state
+
+    def init(self) -> TrainState:
+        """Initialise (or return the current) model/optimizer state."""
+        if self._state is None:
+            params = self.api.init(jax.random.key(self.seed))
+            self._state = TrainState(0, params,
+                                     self.optimizer.init(params))
+        return self._state
+
+    @property
+    def state(self) -> Optional[TrainState]:
+        return self._state
+
+    @property
+    def n_params(self) -> int:
+        return sum(x.size for x in jax.tree.leaves(self.init().params))
+
+    @property
+    def watchdog(self) -> Optional[StragglerWatchdog]:
+        return self._loop.watchdog if self._loop is not None else None
+
+    # ------------------------------------------------------------- run
+
+    def run(self, num_steps: int, *, resume: bool = False,
+            on_report: Optional[Callable[[StepReport], None]] = None) \
+            -> SessionResult:
+        """Train for `num_steps` optimizer steps; returns the final
+        state plus the unified per-step reports."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        self.init()
+        start = len(self.reports)   # result carries THIS run's reports
+        if self.engine == "staged":
+            self._run_staged(num_steps, resume=resume,
+                             on_report=on_report)
+        else:
+            self._run_jit(num_steps, resume=resume, on_report=on_report)
+        return SessionResult(self.engine, self._state,
+                             list(self.reports[start:]))
+
+    def _emit(self, rep: StepReport,
+              on_report: Optional[Callable]) -> None:
+        self.reports.append(rep)
+        if self.metrics_path:
+            if self._metrics_f is None:
+                self._metrics_f = open(self.metrics_path, "a")
+            self._metrics_f.write(json.dumps(rep.to_metrics()) + "\n")
+            self._metrics_f.flush()
+        if on_report:
+            on_report(rep)
+
+    # ---------------------------------------------------- staged engine
+
+    def _staged_resume(self) -> bool:
+        restored = restore_train_state(
+            self._ckpt, self._state.params, self._state.opt_state,
+            self.loader)
+        if restored is None:
+            return False
+        self._state = TrainState(*restored)
+        return True
+
+    def _staged_save(self, final: bool = False) -> None:
+        save_train_state(self._ckpt, self._state.step,
+                         self._state.params, self._state.opt_state,
+                         self.loader, final=final)
+
+    def _run_staged(self, num_steps, *, resume, on_report):
+        if resume:
+            self._staged_resume()
+        if self._loader_iter is None:
+            self._loader_iter = iter(self.loader)
+        params, opt_state = self._state.params, self._state.opt_state
+        step = self._state.step
+        for _ in range(num_steps):
+            batches = [next(self._loader_iter)
+                       for _ in range(self.microbatches)]
+            params, opt_state, rep = self.trainer.train_step(
+                params, opt_state, batches)
+            step += 1
+            rep.step = step
+            tokens = sum(_batch_tokens(b) for b in batches)
+            rep.tokens_per_s = tokens / rep.step_time \
+                if rep.step_time else 0.0
+            self._state = TrainState(step, params, opt_state)
+            self._emit(rep, on_report)
+            if self.ckpt_every and step % self.ckpt_every == 0:
+                self._staged_save()
+        self._staged_save(final=True)
+
+    # ------------------------------------------------------- jit engine
+
+    def _run_jit(self, num_steps, *, resume, on_report):
+        def on_step(step, dt, metrics, batch):
+            tokens = _batch_tokens(batch)
+            extra = {}
+            for k, v in (metrics or {}).items():
+                try:
+                    extra[k] = float(v)
+                except (TypeError, ValueError):
+                    pass
+            rep = StepReport(
+                loss=extra.get("loss", float("nan")),
+                step_time=dt, step=step, engine="jit",
+                stats=self.spool.stats if self.spool else None,
+                tokens_per_s=tokens / dt if dt else 0.0,
+                extra=extra)
+            self._emit(rep, on_report)
+
+        if self._loop is None:
+            self._loop = TrainLoop(
+                step_fn=self._step_fn, init_state=self._state,
+                loader=self.loader, ckpt_dir=self.ckpt_dir,
+                ckpt_every=self.ckpt_every, keep_last=self.keep_last,
+                watchdog=StragglerWatchdog(),
+                spool=self.spool,
+                host_offload=(self.io is not None
+                              and self.io.host_offload == "opt_state"),
+                install_signal_handlers=self.install_signal_handlers)
+        self._loop.on_step = on_step
+        self._loop.state = self._state
+        if resume:
+            self._loop.resume()
+        self._state = self._loop.run(num_steps)
+
+    # ----------------------------------------------------------- close
+
+    def close(self) -> None:
+        """Idempotent teardown: engines, spool, metrics file, and any
+        temp directories this session created."""
+        if self._closed:
+            return
+        self._closed = True
+        if self.trainer is not None:
+            self.trainer.close()
+        if self._loop is not None:
+            self._loop.close()
+        if self.engine == "jit" and self.spool is not None:
+            self.spool.close()
+        if self._ckpt is not None:
+            self._ckpt.wait()
+        if self._metrics_f is not None:
+            self._metrics_f.close()
+        for d in self._owned_tmpdirs:
+            shutil.rmtree(d, ignore_errors=True)
+
+    def __enter__(self) -> "TrainSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -139,6 +139,109 @@ def test_tracker_reflects_offload_lifecycle():
     spool.close()
 
 
+def test_step_lease_roundtrip_and_keys():
+    """The transaction derives the seed's exact key shape and owns drop
+    bookkeeping."""
+    spool, d = _spool()
+    t = _tree()
+    with spool.step("mb0") as tx:
+        assert tx.key(3) == "mb0_s3"
+        tx.offload(3, t)
+        spool.wait_io()
+        assert os.path.exists(os.path.join(d, "mb0_s3.act"))
+        out = tx.fetch(3)
+        for a, b in zip(t, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        tx.drop(3)
+    assert not os.path.exists(os.path.join(d, "mb0_s3.act"))
+    assert spool.tracker.current == 0
+    spool.close()
+
+
+def test_step_lease_drops_leftovers_on_exception():
+    """An exception mid-step must not leak records, memory accounting,
+    or backend blobs (the seed's hand-rolled protocol leaked all
+    three)."""
+    spool, d = _spool()
+    with pytest.raises(RuntimeError, match="boom"):
+        with spool.step("mb0") as tx:
+            tx.offload(0, _tree(0))
+            tx.keep(1, _tree(1))
+            spool.wait_io()
+            raise RuntimeError("boom")
+    assert spool.tracker.current == 0
+    assert not spool._records
+    assert not os.path.exists(os.path.join(d, "mb0_s0.act"))
+    # the lease is released: the same step id can be leased again
+    with spool.step("mb0") as tx:
+        tx.keep(0, _tree())
+        tx.fetch(0)
+    spool.close()
+
+
+def test_step_lease_collision_and_unknown_stage():
+    spool, _ = _spool()
+    tx = spool.step("s")
+    with pytest.raises(RuntimeError):
+        spool.step("s")             # double lease of a live step id
+    with pytest.raises(KeyError):
+        tx.fetch(0)                 # never recorded
+    tx.prefetch(0)                  # unknown stage: silently ignored
+    tx.close()
+    tx.close()                      # idempotent
+    spool.step("s").close()         # released after close
+    spool.close()
+
+
+def test_peek_does_not_cancel_pending_store():
+    """A non-consuming fetch (checkpoint materialization) must leave a
+    queued store alive so the blob still lands; and a consuming fetch
+    after a cancel must forward the still-resident arrays instead of
+    chasing a blob that was never written."""
+    spool, d = _spool(bandwidth_limit=1e6, store_threads=1)  # ~1 MB/s
+    t1, t2 = _tree(1), _tree(2)
+    with spool.step("opt") as tx:
+        spool.offload("blocker", t1)    # occupies the single store thread
+        tx.offload(0, t2)               # waits in queue
+        out = tx.peek(0)                # forwarded, NOT cancelled
+        for a, b in zip(t2, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert spool.stats.stores_canceled == 0
+        spool.wait_io()                 # the store still landed
+        assert os.path.exists(os.path.join(d, "opt_s0.act"))
+        out2 = tx.fetch(0)              # consuming fetch finds the blob
+        for a, b in zip(t2, out2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.drop("blocker")
+    spool.close()
+
+
+def test_refetch_after_cancel_forwards_resident_arrays():
+    spool, _ = _spool(bandwidth_limit=1e6, store_threads=1)
+    spool.offload("a", _tree(1))        # occupies the single store thread
+    t = _tree(2)
+    spool.offload("b", t)               # queued
+    spool.fetch("b")                    # forwards + cancels the write
+    assert spool.stats.stores_canceled == 1
+    out = spool.fetch("b")              # must forward again, not raise
+    for a, b in zip(t, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.wait_io()
+    spool.close()
+
+
+def test_close_joins_workers_and_is_idempotent():
+    spool, _ = _spool()
+    spool.offload("k", _tree())
+    threads = list(spool._threads)
+    assert threads
+    spool.close()
+    assert all(not t.is_alive() for t in threads)
+    spool.close()                   # second close: no-op
+    with pytest.raises(RuntimeError):
+        spool.step("late")          # no leases on a closed spool
+
+
 def test_bandwidth_limit_enforced():
     spool, _ = _spool(bandwidth_limit=2e6)
     t = [jnp.ones((512, 512), jnp.float32)]   # 1 MB
