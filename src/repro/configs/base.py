@@ -160,10 +160,12 @@ class SpoolIoConfig:
     or "tiered" (RAM under `host_mem_budget_bytes`, spilling to a lower
     fs/striped backend).
 
-    host_offload: what the jit engine stages through the spool between
-    steps — "none" (spool unused by the jit engine; the staged engine
-    ignores this field) or "opt_state" (optimizer moments live on the
-    selected backend while the step executes, 10Cache-style)."""
+    host_offload: what the jit engine routes through the spool —
+    "none" (spool unused by the jit engine; the staged engine ignores
+    this field), "opt_state" (optimizer moments live on the selected
+    backend *between* steps, 10Cache-style), or "activations"
+    (per-layer residuals stream through the backend *inside* the jitted
+    step via the repro.core.hooks io_callback path)."""
     backend: str = "fs"
     directory: Optional[str] = None        # None -> fresh temp dir
     stripe_dirs: Tuple[str, ...] = ()
@@ -173,14 +175,14 @@ class SpoolIoConfig:
     store_threads: int = 4
     load_threads: int = 4
     bandwidth_limit: Optional[float] = None
-    host_offload: str = "none"             # none | opt_state (jit engine)
+    host_offload: str = "none"      # none | opt_state | activations (jit)
 
     def validate(self) -> "SpoolIoConfig":
         assert self.backend in ("fs", "striped", "mem", "tiered"), \
             self.backend
         assert self.stripe_chunk_bytes > 0
         assert self.host_mem_budget_bytes >= 0
-        assert self.host_offload in ("none", "opt_state"), \
+        assert self.host_offload in ("none", "opt_state", "activations"), \
             self.host_offload
         if self.backend == "striped":
             assert len(self.stripe_dirs) != 1, \

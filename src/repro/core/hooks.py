@@ -1,0 +1,185 @@
+"""Per-layer activation offloading hooks for the jit engine (paper §3.2).
+
+The staged engine hands each module's autograd residuals to the
+`ActivationSpool` from ordinary Python between per-stage jit calls. The
+jit engine runs the whole training step as ONE XLA program, so the same
+pack/unpack-hook dataflow has to cross the program boundary from inside
+the trace. This module is that bridge:
+
+  * `spooled_scan_body(fn, bridge)` wraps a segment's scan body in a
+    `jax.custom_vjp`. The forward computes the segment's actual autograd
+    residuals (the leaves of the `jax.vjp` closure, exactly like
+    `core.staged._Stage`), keeps the parameter leaves as ordinary XLA
+    residuals, and hands everything else to the spool through a
+    `jax.experimental.io_callback` — after which XLA frees the device
+    buffers (pack-hook semantics). The backward's io_callback fetches
+    them back (blocking, with the spool's tensor forwarding if the store
+    is still in flight) and applies the saved vjp.
+  * `HookBridge` is the host side: a thread-safe shim that keys spool
+    step-leases on the *traced* step counter the callbacks receive, so
+    re-entrant offload/fetch calls from XLA host-callback threads land
+    in the right transaction. A backward fetch prefetches the previous
+    stage first (§3.3.2, one module ahead).
+
+Ordering note: the forward callback returns a tiny token that is
+threaded through the custom_vjp residuals into the backward callback's
+operands. The pairing is therefore enforced by DATA dependence, not by
+`ordered=True` effects — scan linearization drops unordered-result-free
+effectful calls from the forward pass, and tokens also keep XLA from
+reordering a fetch before its store was enqueued.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+from repro.core.spool import ActivationSpool, SpoolStepTransaction
+
+#: stage-index offset for encoder-stream layers, so one step lease can
+#: hold both streams without key collisions (decoder layers are 0-based)
+ENC_STAGE_BASE = 1 << 20
+
+
+class HookBridge:
+    """Host-side endpoint of the jit engine's activation-offload hooks.
+
+    One bridge per training session. Callbacks arrive on XLA's
+    host-callback threads with (step, stage) scalars; the bridge opens
+    one transactional spool lease per step (key ``jit{step}``, mirroring
+    the staged engine's ``mb{mb}``) and closes it when the backward pass
+    has consumed every recorded stage.
+    """
+
+    def __init__(self, spool: ActivationSpool, *, key_prefix: str = "jit"):
+        self.spool = spool
+        self._prefix = key_prefix
+        self._lock = threading.RLock()
+        self._txs: Dict[int, SpoolStepTransaction] = {}
+
+    @property
+    def stats(self):
+        return self.spool.stats
+
+    def _tx(self, step: int) -> SpoolStepTransaction:
+        with self._lock:
+            tx = self._txs.get(step)
+            if tx is None:
+                tx = self.spool.step(f"{self._prefix}{step}")
+                self._txs[step] = tx
+            return tx
+
+    # ---------------------------------------------------- callback API
+
+    def offload(self, step: int, stage: int, arrays: List[Any]) -> None:
+        """Forward hook: async-store one segment's residual leaves."""
+        self._tx(step).offload(stage, list(arrays))
+
+    def fetch(self, step: int, stage: int) -> List[np.ndarray]:
+        """Backward hook: blocking fetch of one segment's residuals,
+        prefetching the previous stage first (one module ahead). Closes
+        the step's lease when its last live stage is consumed."""
+        with self._lock:
+            tx = self._txs.get(step)
+        if tx is None:
+            raise KeyError(f"no live spool lease for jit step {step}")
+        tx.prefetch(stage - 1)
+        out = tx.fetch(stage)
+        arrays = [np.asarray(a) for a in out]
+        tx.drop(stage)
+        with self._lock:
+            if not tx.live_stages and self._txs.get(step) is tx:
+                del self._txs[step]
+                tx.close()
+        return arrays
+
+    def close(self) -> None:
+        """Drop any leftover leases (a step aborted mid-backward)."""
+        with self._lock:
+            txs, self._txs = list(self._txs.values()), {}
+        for tx in txs:
+            tx.close()
+
+
+def spooled_scan_body(fn: Callable, bridge: HookBridge) -> Callable:
+    """Wrap ``fn(p_layer, x) -> out`` (a segment's per-layer body) so its
+    residuals stream through the bridge's spool.
+
+    Returns ``wrapped(p_layer, x, step, stage) -> out`` where `step` and
+    `stage` are traced float32 scalars (float so the custom_vjp
+    cotangents are ordinary zeros; values are exact integers). The
+    undifferentiated primal path calls `fn` directly — serving and eval
+    never touch the spool.
+    """
+    # populated at trace time by fwd, read by bwd (same trace); the
+    # pattern and the param-leaf identity test match core.staged._Stage
+    cell: Dict[str, Any] = {}
+
+    @jax.custom_vjp
+    def wrapped(p, x, step, stage):
+        return fn(p, x)
+
+    def fwd(p, x, step, stage):
+        out, vjp = jax.vjp(fn, p, x)
+        leaves, treedef = jax.tree.flatten(vjp)
+        pids = {id(t) for t in jax.tree.leaves(p)}
+        param_idx = tuple(i for i, l in enumerate(leaves) if id(l) in pids)
+        resid_idx = tuple(i for i in range(len(leaves))
+                          if i not in param_idx)
+        cell["treedef"] = treedef
+        cell["param_idx"] = param_idx
+        cell["resid_idx"] = resid_idx
+        cell["n_leaves"] = len(leaves)
+        cell["resid_shapes"] = tuple(
+            jax.ShapeDtypeStruct(leaves[i].shape, leaves[i].dtype)
+            for i in resid_idx)
+        kept = tuple(leaves[i] for i in param_idx)
+        if not resid_idx:            # segment saved only parameter leaves
+            return out, (kept, step, stage, jnp.zeros((), jnp.int32))
+
+        def offload_cb(step_, stage_, *arrays):
+            bridge.offload(int(step_), int(stage_), list(arrays))
+            return np.int32(0)
+
+        token = io_callback(offload_cb, jax.ShapeDtypeStruct((), jnp.int32),
+                            step, stage,
+                            *(leaves[i] for i in resid_idx))
+        return out, (kept, step, stage, token)
+
+    def bwd(res, g):
+        kept, step, stage, token = res
+        leaves: List[Any] = [None] * cell["n_leaves"]
+        for i, l in zip(cell["param_idx"], kept):
+            leaves[i] = l
+        if cell["resid_idx"]:
+            def fetch_cb(step_, stage_, _token):
+                return tuple(bridge.fetch(int(step_), int(stage_)))
+
+            fetched = io_callback(fetch_cb, cell["resid_shapes"],
+                                  step, stage, token)
+            for i, l in zip(cell["resid_idx"], fetched):
+                leaves[i] = l
+        vjp = jax.tree.unflatten(cell["treedef"], leaves)
+        dp, dx = vjp(g)
+        return dp, dx, jnp.zeros_like(step), jnp.zeros_like(stage)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+def run_splits(mask: List[bool]) -> List[tuple]:
+    """Split a per-layer offload mask into contiguous (start, end,
+    offload) runs — a scanned super-layer can only be hooked whole, so
+    mixed plans split the stack into a few shorter scans."""
+    runs = []
+    start = 0
+    for i in range(1, len(mask) + 1):
+        if i == len(mask) or mask[i] != mask[start]:
+            runs.append((start, i, mask[start]))
+            start = i
+    return runs

@@ -22,13 +22,46 @@ flag) onto these objects so seed call shapes keep working.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Union
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core.adaptive import (BWD_FACTOR, BandwidthLike, ModuleProfile,
                                  OffloadPlan, plan_offload)
 
 #: stage roles whose backward can be recomputed from the module input
 RECOMPUTABLE_ROLES = ("layer", "enc_layer")
+
+
+def _is_decoder_layer(name: str) -> bool:
+    """Staged-engine stage names: decoder layers are 'seg{si}_l{rep}'."""
+    return name.startswith("seg") and "_l" in name
+
+
+@dataclass(frozen=True)
+class JitOffloadPlan:
+    """A profiled plan translated for the jit engine: per-decoder-layer
+    keep/offload choices for the repro.core.hooks spool path, derived
+    from the same `on_profile` data that drives the staged engine.
+
+    `spool_stages[i]` is True when decoder layer i's residuals should
+    stream through the spool; False keeps them on device (matching the
+    staged AdaptivePolicy's keep-set). `activation_policy` is what
+    `RunSettings.activation_policy` should be — "spool" while any layer
+    offloads, else "keep" (nothing to stream)."""
+
+    spool_stages: Tuple[bool, ...]
+    activation_policy: str                     # "spool" | "keep"
+    required_bw: float
+    write_bw: float
+
+    def apply(self, settings) -> "RunSettings":  # noqa: F821
+        """The same RunSettings with this plan's placement choices."""
+        import dataclasses
+        return dataclasses.replace(
+            settings,
+            activation_policy=self.activation_policy,
+            spool_stages=(self.spool_stages
+                          if self.activation_policy == "spool" else None))
 
 
 class OffloadPolicy:
@@ -130,6 +163,24 @@ class AdaptivePolicy(OffloadPolicy):
                                  bwd_factor=self.bwd_factor,
                                  always_keep_last=self.always_keep_last)
         return self.plan
+
+    def plan_for_jit(self) -> JitOffloadPlan:
+        """The profiled plan as per-decoder-layer placement for the jit
+        engine's hook path — one policy object, profiled once (on either
+        engine), drives both step-execution modes."""
+        if self.plan is None or self.profiles is None:
+            raise RuntimeError(
+                "plan_for_jit() needs a profiling step first: run one "
+                "staged step with this policy (on_profile) before "
+                "translating the plan for the jit engine")
+        mask = tuple(bool(off)
+                     for prof, off in zip(self.profiles, self.plan.offload)
+                     if _is_decoder_layer(prof.name))
+        return JitOffloadPlan(
+            spool_stages=mask,
+            activation_policy="spool" if any(mask) else "keep",
+            required_bw=self.plan.required_bw,
+            write_bw=self.plan.write_bw)
 
     def __repr__(self):
         return (f"AdaptivePolicy(bwd_factor={self.bwd_factor}, "

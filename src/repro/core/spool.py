@@ -153,26 +153,30 @@ class SpoolStepTransaction:
             tx.drop(si)
     """
 
-    __slots__ = ("_spool", "step_id", "_live", "_closed")
+    __slots__ = ("_spool", "step_id", "_live", "_closed", "_tlock")
 
     def __init__(self, spool: "ActivationSpool", step_id: str):
         self._spool = spool
         self.step_id = step_id
         self._live: Dict[Any, str] = {}     # stage -> spool key
         self._closed = False
+        # the jit engine's hooks drive one transaction from XLA
+        # host-callback threads; stage bookkeeping must be re-entrant
+        self._tlock = threading.Lock()
 
     def key(self, stage) -> str:
         return f"{self.step_id}_s{stage}"
 
     def _record(self, stage) -> str:
-        if self._closed:
-            raise RuntimeError(
-                f"spool transaction {self.step_id!r} is closed")
-        key = self.key(stage)
-        if stage in self._live:
-            raise KeyError(f"stage {stage!r} already live in step "
-                           f"{self.step_id!r}")
-        self._live[stage] = key
+        with self._tlock:
+            if self._closed:
+                raise RuntimeError(
+                    f"spool transaction {self.step_id!r} is closed")
+            key = self.key(stage)
+            if stage in self._live:
+                raise KeyError(f"stage {stage!r} already live in step "
+                               f"{self.step_id!r}")
+            self._live[stage] = key
         return key
 
     def offload(self, stage, tree) -> None:
@@ -187,14 +191,16 @@ class SpoolStepTransaction:
     def prefetch(self, stage) -> None:
         """Hint an async load; a stage this lease never recorded is
         ignored (recompute stages have nothing to load)."""
-        key = self._live.get(stage)
+        with self._tlock:
+            key = self._live.get(stage)
         if key is not None:
             self._spool.prefetch(key)
 
     def fetch(self, stage):
         """Blocking: the stage's full residual pytree (forwarded from
         the in-flight store or reloaded from the backend)."""
-        key = self._live.get(stage)
+        with self._tlock:
+            key = self._live.get(stage)
         if key is None:
             raise KeyError(f"stage {stage!r} not recorded in step "
                            f"{self.step_id!r}")
@@ -204,7 +210,8 @@ class SpoolStepTransaction:
         """Non-consuming fetch: materialize the pytree WITHOUT
         cancelling a still-queued store, so a later fetch/drop still
         finds the blob on the backend (checkpoint materialization)."""
-        key = self._live.get(stage)
+        with self._tlock:
+            key = self._live.get(stage)
         if key is None:
             raise KeyError(f"stage {stage!r} not recorded in step "
                            f"{self.step_id!r}")
@@ -212,22 +219,26 @@ class SpoolStepTransaction:
 
     def drop(self, stage) -> None:
         """Consume the stage: free memory and delete the blob."""
-        key = self._live.pop(stage, None)
+        with self._tlock:
+            key = self._live.pop(stage, None)
         if key is not None:
             self._spool.drop(key)
 
     @property
     def live_stages(self):
-        return sorted(self._live)
+        with self._tlock:
+            return sorted(self._live)
 
     def close(self) -> None:
         """Drop every record not consumed yet and release the lease.
         Idempotent; this is the leak-on-exception backstop."""
-        if self._closed:
-            return
-        for stage in list(self._live):
+        with self._tlock:
+            if self._closed:
+                return
+            self._closed = True
+            leftover = list(self._live)
+        for stage in leftover:
             self.drop(stage)
-        self._closed = True
         self._spool._release_step(self.step_id)
 
     def __enter__(self) -> "SpoolStepTransaction":
@@ -378,6 +389,12 @@ class ActivationSpool:
             with job.cond:
                 if job.state in (QUEUED, RUNNING):
                     return          # still in memory; forwarding will hit
+                if job.arrays is not None:
+                    # CANCELED (or failed) store with its arrays still
+                    # resident: the blob was never written, so a load
+                    # would ghost-read the backend and bury the real
+                    # error — fetch() forwards the in-memory reference
+                    return
             if rec["load_job"] is not None or rec["loaded"] is not None:
                 return
             lj = _Job(key, None, "load")

@@ -393,7 +393,10 @@ class StagedTrainer:
         enc_grad = None
         for si in range(n_stages - 1, -1, -1):
             stage = self._stages[si]
-            if si - 1 > 0:
+            if si - 1 >= 0:
+                # one module ahead (§3.3.2) — including stage 0: the
+                # embed stage's residuals were a cold blocking load
+                # under the old `> 0` off-by-one
                 tx.prefetch(si - 1)
             if si in recompute_in:
                 outs = stage.bwd_recompute(stage_params[si],

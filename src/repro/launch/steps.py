@@ -81,11 +81,20 @@ def make_host_train_step(api: ModelApi, optimizer: Optimizer,
     """Whole-step jitted train step for the single-host jit engine (no
     mesh plumbing) — shared by `repro.session.TrainSession` and
     `repro.launch.train`. Signature matches what TrainLoop drives:
-    (params, opt_state, batch) -> (params, opt_state, metrics)."""
+    (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With the "spool" activation policy (per-layer offloading via
+    repro.core.hooks), the optimizer's step counter is threaded into the
+    batch under the reserved "_spool_step" key — the traced scalar the
+    hooks key their spool step-leases on."""
+    hooked = (settings.activation_policy == "spool"
+              and settings.hook_bridge is not None)
 
     @jax.jit
     def step_fn(params, opt_state, batch):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if hooked:
+            batch["_spool_step"] = opt_state.step
         (_, metrics), grads = jax.value_and_grad(
             api.loss, has_aux=True)(params, batch, settings)
         params, opt_state = optimizer.update(grads, opt_state, params)
@@ -146,6 +155,12 @@ def make_train_step(api: ModelApi, mesh, axes: MeshAxes,
     # offload) trips XLA's SPMD partitioner ("side-effect ops cannot be
     # replicated" on annotate_device_placement custom-calls).
     def train_step(params, opt_state, batch):
+        if settings.activation_policy == "spool" \
+                and settings.hook_bridge is not None:
+            # per-layer spool hooks (single-device meshes only — an
+            # io_callback cannot be partitioned across an SPMD program)
+            batch = dict(batch)
+            batch["_spool_step"] = opt_state.step
         (_, metrics), grads = jax.value_and_grad(
             api.loss, has_aux=True)(params, batch, settings)
         params, opt_state = optimizer.update(grads, opt_state, params)

@@ -5,9 +5,12 @@ selected by --engine:
 
   jit     — whole-step jax.jit training wrapped in the fault-tolerant
             TrainLoop (async checkpoints, preemption trap, straggler
-            watchdog, resume). With --host-offload, the optimizer state
-            is staged through the SpoolIoConfig-selected backend between
-            steps, so both engines share backend/codec selection.
+            watchdog, resume). With --host-offload opt_state, the
+            optimizer state is staged through the SpoolIoConfig-selected
+            backend between steps; with --host-offload activations,
+            per-layer residuals stream through that backend from inside
+            the jitted step (repro.core.hooks io_callback path) — both
+            engines share backend/codec selection either way.
   staged  — the TBA host-staged trainer (core/staged.py): per-module
             jitted stages with the ActivationSpool offloading real
             residuals to real disk, placement decided by an
@@ -72,9 +75,15 @@ def main() -> None:
                     help="payload codec for spooled payloads")
     ap.add_argument("--host-mem-budget-mb", type=int, default=256,
                     help="tiered backend: host-RAM tier budget in MiB")
-    ap.add_argument("--host-offload", action="store_true",
-                    help="jit engine: stage the optimizer state through "
-                         "the spool backend between steps")
+    ap.add_argument("--host-offload", nargs="?", const="opt_state",
+                    default="none",
+                    choices=["none", "opt_state", "activations"],
+                    help="jit engine: what to route through the spool "
+                         "backend — 'opt_state' stages the optimizer "
+                         "state between steps (bare --host-offload "
+                         "keeps meaning this); 'activations' streams "
+                         "per-layer residuals from inside the jitted "
+                         "step (repro.core.hooks)")
     args = ap.parse_args()
 
     stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
@@ -83,7 +92,7 @@ def main() -> None:
         backend=args.spool_backend, directory=args.spool_dir,
         stripe_dirs=stripe_dirs, codec=args.codec,
         host_mem_budget_bytes=args.host_mem_budget_mb << 20,
-        host_offload="opt_state" if args.host_offload else "none")
+        host_offload=args.host_offload)
 
     # the context manager guarantees teardown (worker-thread join, temp
     # spool/ckpt dir removal) on exceptions and Ctrl-C too

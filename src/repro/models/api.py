@@ -69,11 +69,29 @@ def _init_segments(key, segs, cfg, dtype):
 
 
 def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
-                  emit_cache=False, positions=None, cache_len=0):
-    """Apply all segments. Returns (x, caches, aux_totals)."""
+                  emit_cache=False, positions=None, cache_len=0,
+                  hook_step=None, hook_base=0):
+    """Apply all segments. Returns (x, caches, aux_totals).
+
+    When the "spool" activation policy is active and a traced step
+    counter is supplied (the jit engine's train step), each scanned
+    layer is wrapped in the repro.core.hooks custom_vjp so its autograd
+    residuals stream through the ActivationSpool instead of living in
+    device memory for the whole step. `settings.spool_stages` (decoder
+    stream only, i.e. hook_base == 0) may keep a subset of layers on
+    device; a scanned stack is then split into contiguous runs because
+    a scan body's residual structure must be uniform."""
     wrap = remat_policy(settings)
     aux_tot: Dict[str, jnp.ndarray] = {}
     caches = []
+    hooked = (settings.activation_policy == "spool"
+              and settings.hook_bridge is not None
+              and hook_step is not None and not emit_cache)
+    if hooked:
+        from repro.core.hooks import run_splits, spooled_scan_body
+        step_f = jnp.asarray(hook_step, jnp.float32)
+        mask = settings.spool_stages if hook_base == 0 else None
+    layer0 = 0
 
     for seg, p_stack in zip(segs, seg_params):
         def body(x, p_layer, seg=seg):
@@ -88,12 +106,63 @@ def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
                         bdef, c, cfg, cache_len)
             return x, (cache_entries if emit_cache else None, aux)
 
+        if hooked:
+            # enc_states must be an EXPLICIT custom_vjp input (a
+            # closed-over differentiable value raises at trace time and
+            # its cotangent would be lost), so cross-attention segments
+            # carry (x, enc) through the scan — enc passes through
+            # unchanged and its per-layer cotangents accumulate on the
+            # backward carry exactly like the staged engine's enc_grad.
+            def seg_fn(p_layer, carry_in, seg=seg):
+                x_, enc_ = (carry_in if enc_states is not None
+                            else (carry_in, None))
+                aux: Dict[str, jnp.ndarray] = {}
+                for i, bdef in enumerate(seg.blocks):
+                    x_, _ = apply_block(bdef, p_layer[f"b{i}"], x_, cfg,
+                                        settings, positions=positions,
+                                        enc_kv=enc_, aux=aux)
+                out = (x_, enc_) if enc_states is not None else x_
+                return out, aux
+
+            wrapped = spooled_scan_body(seg_fn, settings.hook_bridge)
+            seg_mask = [bool(mask[layer0 + i])
+                        if mask is not None and layer0 + i < len(mask)
+                        else True
+                        for i in range(seg.n_repeat)]
+            carry = (x, enc_states) if enc_states is not None else x
+            for start, end, offl in run_splits(seg_mask):
+                p_run = jax.tree.map(lambda a: a[start:end], p_stack)
+                if offl:
+                    idxs = (jnp.arange(start, end, dtype=jnp.float32)
+                            + (hook_base + layer0))
+
+                    def scan_body(c, inp, wrapped=wrapped):
+                        p_layer, idx = inp
+                        return wrapped(p_layer, c, step_f, idx)
+
+                    carry, aux_stack = jax.lax.scan(scan_body, carry,
+                                                    (p_run, idxs))
+                else:
+
+                    def scan_body(c, p_layer, seg_fn=seg_fn):
+                        return seg_fn(p_layer, c)
+
+                    carry, aux_stack = jax.lax.scan(scan_body, carry,
+                                                    p_run)
+                for k, v in aux_stack.items():
+                    aux_tot[k] = aux_tot.get(k, 0.0) + jnp.sum(v)
+            x = carry[0] if enc_states is not None else carry
+            caches.append(None)
+            layer0 += seg.n_repeat
+            continue
+
         body = wrap(body)
         x, (cache_stack, aux_stack) = jax.lax.scan(
             lambda c, p: body(c, p), x, p_stack)
         caches.append(cache_stack)
         for k, v in aux_stack.items():
             aux_tot[k] = aux_tot.get(k, 0.0) + jnp.sum(v)
+        layer0 += seg.n_repeat
     return x, caches, aux_tot
 
 
@@ -198,12 +267,15 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         return params
 
     def _encode(params, batch, settings):
+        from repro.core.hooks import ENC_STAGE_BASE
         enc_cfg = dataclasses.replace(cfg, causal=False)
         x = _embed_in(params, {"tokens": batch["enc_tokens"]}, enc_cfg,
                       settings)
         pos = jnp.arange(x.shape[1])
         x, _, _ = _run_segments(x, params["enc_segments"], enc_segs,
-                                enc_cfg, settings, positions=pos)
+                                enc_cfg, settings, positions=pos,
+                                hook_step=batch.get("_spool_step"),
+                                hook_base=ENC_STAGE_BASE)
         return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
 
     def _enc_states(params, batch, settings):
@@ -222,7 +294,8 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         x, caches, aux = _run_segments(
             x, params["segments"], segs, cfg, settings,
             enc_states=enc_states, emit_cache=emit_cache,
-            positions=positions, cache_len=cache_len or x.shape[1])
+            positions=positions, cache_len=cache_len or x.shape[1],
+            hook_step=batch.get("_spool_step"))
         logits = _head(params, x, cfg, settings)
         return (logits, caches, aux) if emit_cache else (logits, aux)
 
@@ -247,7 +320,7 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         x, _, aux = _run_segments(
             x, params["segments"], segs, cfg, settings,
             enc_states=enc_states, positions=positions,
-            cache_len=x.shape[1])
+            cache_len=x.shape[1], hook_step=batch.get("_spool_step"))
         return x, aux
 
     def loss(params, batch, settings: RunSettings):

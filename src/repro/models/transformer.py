@@ -99,9 +99,17 @@ class RunSettings:
     attn_impl: str = "xla"            # xla | pallas | pallas_interpret
     attn_chunk: int = 1024
     # Activation placement: "keep" | "remat" | "offload" | "offload_ssd"
-    # (the paper's three ROK strategies + the in-graph host-offload tier).
+    # (the paper's three ROK strategies + the in-graph host-offload tier)
+    # | "spool" (per-layer residuals stream through the ActivationSpool
+    # via io_callback hooks — repro.core.hooks; requires hook_bridge).
     activation_policy: str = "keep"
     offload_names: Tuple[str, ...] = ("blk_in",)
+    # "spool" policy only: the HookBridge the hooks talk to, and an
+    # optional per-decoder-layer offload mask (None = offload every
+    # layer; False entries keep that layer's residuals on device —
+    # AdaptivePolicy.plan_for_jit() emits these).
+    hook_bridge: Any = None
+    spool_stages: Optional[Tuple[bool, ...]] = None
     mesh: Any = None                  # jax Mesh (sharding hints + EP)
     ep_axis: Optional[str] = None     # expert-parallel axis (MoE shard_map)
     tp_axis: Optional[str] = None     # tensor-parallel axis (hints)
@@ -118,6 +126,12 @@ def remat_policy(settings: RunSettings):
     """Returns (wrap_segment_body) implementing the placement strategy."""
     pol = settings.activation_policy
     if pol == "keep":
+        return lambda f: f
+    if pol == "spool":
+        # the spool hooks are applied by _run_segments itself (they need
+        # the traced step/stage scalars); outside a hooked train step —
+        # serving, eval, a loss call with no step counter — residuals
+        # simply stay on device
         return lambda f: f
     if pol == "remat":
         return lambda f: jax.checkpoint(f, prevent_cse=False)

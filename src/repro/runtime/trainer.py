@@ -14,13 +14,17 @@ Responsibilities (the ones a 1000-node fleet actually needs):
     a checkpoint taken on one topology restores onto another;
   * metrics — JSONL lines per step (loss, step time, tokens/s);
   * host offload — with an `ActivationSpool` attached (built from a
-    `SpoolIoConfig` by `TrainSession`), the optimizer state is staged
-    through the spool's storage backend between steps: offloaded
-    asynchronously after the update, fetched (with tensor forwarding)
-    just before the next one. Both engines thereby share backend/codec
-    selection — the jit engine's whole-step XLA program cannot hand
-    per-module residuals to the spool, so its offloadable host state is
-    what lives *between* steps (10Cache-style optimizer-state tiering).
+    `SpoolIoConfig` by `TrainSession`), two modes share the spool's
+    backend/codec selection with the staged engine:
+      - "opt_state": the optimizer state is staged through the storage
+        backend between steps — offloaded asynchronously after the
+        update, fetched (with tensor forwarding) just before the next
+        one (10Cache-style optimizer-state tiering);
+      - "activations": per-layer residuals stream through the backend
+        *inside* the jitted step via the repro.core.hooks io_callback
+        path — the step_fn owns that traffic (the loop only holds the
+        spool for stats/teardown), so the two modes coexist as
+        alternatives on one spool.
 """
 from __future__ import annotations
 
@@ -45,6 +49,17 @@ class TrainState:
     step: int
     params: Any
     opt_state: Any
+
+
+def batch_tokens(batch) -> int:
+    """Tokens a batch contributes to throughput. With labels present
+    only real targets count (labels >= 0) — shape products overcount
+    padded positions. Returns 0 when the batch carries no tokens."""
+    if isinstance(batch, dict) and "labels" in batch:
+        return int(np.sum(np.asarray(batch["labels"]) >= 0))
+    if isinstance(batch, dict) and "tokens" in batch:
+        return int(np.prod(batch["tokens"].shape))
+    return 0
 
 
 class StragglerWatchdog:
@@ -80,7 +95,7 @@ class TrainLoop:
                  watchdog: Optional[StragglerWatchdog] = None,
                  shardings: Any = None,
                  spool: Any = None,
-                 host_offload: bool = False,
+                 host_offload: Any = False,
                  on_step: Optional[Callable[[int, float, Any, Any],
                                             None]] = None,
                  install_signal_handlers: bool = False):
@@ -92,10 +107,17 @@ class TrainLoop:
         self.metrics_path = metrics_path
         self.watchdog = watchdog or StragglerWatchdog()
         self.shardings = shardings
-        # host offload (opt-state tiering): the spool is owned by the
-        # caller (TrainSession); the loop only leases per-step records.
+        # host offload: the spool is owned by the caller (TrainSession).
+        # Mode "opt_state" leases per-step records here; "activations"
+        # is driven from inside step_fn (repro.core.hooks) and the loop
+        # only carries the spool. Legacy bool maps onto "opt_state".
+        if isinstance(host_offload, bool):
+            host_offload = "opt_state" if host_offload else "none"
+        assert host_offload in ("none", "opt_state", "activations"), \
+            host_offload
         self.spool = spool
-        self.host_offload = bool(host_offload) and spool is not None
+        self.host_offload = (host_offload if spool is not None
+                             else "none")
         self.on_step = on_step
         self._opt_tx = None          # live SpoolStepTransaction, if any
         self._preempted = False
@@ -133,7 +155,7 @@ class TrainLoop:
         """Async-offload the fresh optimizer state through the spool;
         returns what TrainState should hold (None while spooled — the
         spool owns the only strong reference until the next acquire)."""
-        if not self.host_offload:
+        if self.host_offload != "opt_state":
             return opt_state
         tx = self.spool.step(f"opt{step}")
         tx.offload(0, opt_state)
@@ -169,7 +191,13 @@ class TrainLoop:
         it = iter(self.loader)
         target = self.state.step + num_steps
         while self.state.step < target and not self._preempted:
-            batch = next(it)
+            try:
+                batch = next(it)
+            except StopIteration:
+                # a finite loader ran dry: end the loop cleanly — the
+                # final checkpoint and the staged-opt-state
+                # rematerialization below must still run
+                break
             t0 = time.perf_counter()
             params, opt_state, metrics = self.step_fn(
                 self.state.params, self._acquire_opt_state(), batch)
@@ -197,9 +225,7 @@ class TrainLoop:
         if self._metrics_f is None:
             return
         rec = {"step": self.state.step, "step_time_s": dt}
-        tokens = None
-        if isinstance(batch, dict) and "tokens" in batch:
-            tokens = int(np.prod(batch["tokens"].shape))
+        tokens = batch_tokens(batch)
         if tokens:
             rec["tokens_per_s"] = tokens / dt
         for k, v in (metrics or {}).items():

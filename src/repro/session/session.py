@@ -10,8 +10,12 @@ behind one hook-based API) maps here to a single facade that owns:
   * placement policy       — an `OffloadPolicy` object (staged engine)
   * the ActivationSpool    — built from one `SpoolIoConfig` for EITHER
                              engine: the staged engine spools per-module
-                             residuals, the jit engine stages optimizer
-                             state between steps (`io.host_offload`)
+                             residuals; the jit engine stages optimizer
+                             state between steps
+                             (`io.host_offload="opt_state"`) or streams
+                             per-layer residuals from inside the jitted
+                             step through repro.core.hooks
+                             (`io.host_offload="activations"`)
   * checkpointing          — periodic async checkpoints + resume
   * metrics                — one unified `StepReport` stream / JSONL
                              schema regardless of engine
@@ -49,7 +53,7 @@ from repro.models.api import build_model
 from repro.models.transformer import RunSettings
 from repro.optim.optimizers import Optimizer, adamw, sgd
 from repro.runtime.trainer import (StragglerWatchdog, TrainLoop,
-                                   TrainState)
+                                   TrainState, batch_tokens)
 
 ENGINES = ("staged", "jit")
 
@@ -86,10 +90,8 @@ def _resolve_optimizer(optimizer: Union[str, Optimizer],
     raise ValueError(f"unknown optimizer {optimizer!r}")
 
 
-def _batch_tokens(batch) -> int:
-    if isinstance(batch, dict) and "tokens" in batch:
-        return int(np.prod(batch["tokens"].shape))
-    return 0
+# one throughput rule for both engines (labels >= 0 are real targets)
+_batch_tokens = batch_tokens
 
 
 @dataclass
@@ -138,8 +140,11 @@ class TrainSession:
             raise ValueError(
                 "OffloadPolicy applies to the staged engine; the jit "
                 "engine fixes activation placement at trace time "
-                "(RunSettings.activation_policy) and uses io.host_offload "
-                "for between-step spooling")
+                "(RunSettings.activation_policy) and uses "
+                "io.host_offload ('opt_state' between-step staging or "
+                "'activations' per-layer hooks). To drive the jit "
+                "engine from a profiled AdaptivePolicy, pass "
+                "settings=policy.plan_for_jit().apply(settings)")
         self.engine = engine
         self.cfg = (resolve_config(arch) if isinstance(arch, str)
                     else arch.validate())
@@ -173,6 +178,7 @@ class TrainSession:
             self._owned_tmpdirs.append(ckpt_dir)
         self.ckpt_dir = ckpt_dir
 
+        self._hook_bridge = None
         if engine == "staged":
             self.policy = resolve_policy(policy)
             self.settings = settings or RunSettings(
@@ -190,17 +196,38 @@ class TrainSession:
             self.policy = None
             self.trainer = None
             self._ckpt = None       # TrainLoop owns its manager
-            self.settings = settings or RunSettings(
-                attn_impl="xla", attn_chunk=256,
-                activation_policy="remat", param_dtype=self.cfg.dtype)
-            self._step_fn = make_host_train_step(
-                self.api, self.optimizer, self.settings)
+            mode = self.io.host_offload if self.io is not None else "none"
             self.spool = None
-            if self.io is not None and self.io.host_offload != "none":
+            if mode != "none":
                 self.spool, owned = build_spool(
                     self.io, spool_dir=spool_dir,
                     min_offload_elements=min_offload_elements)
                 self._owned_tmpdirs += owned
+            if mode == "activations" and settings is not None \
+                    and settings.activation_policy != "spool":
+                raise ValueError(
+                    "io.host_offload='activations' requires "
+                    "settings.activation_policy='spool' (got "
+                    f"{settings.activation_policy!r}); either drop the "
+                    "'activations' mode or let the session synthesize "
+                    "the settings. A JitOffloadPlan that kept every "
+                    "layer on device (activation_policy='keep') needs "
+                    "no spool — run without host_offload='activations'")
+            self.settings = settings or RunSettings(
+                attn_impl="xla", attn_chunk=256,
+                activation_policy=("spool" if mode == "activations"
+                                   else "remat"),
+                param_dtype=self.cfg.dtype)
+            if mode == "activations" \
+                    and self.settings.activation_policy == "spool":
+                # per-layer residual streaming: the hooks inside the
+                # jitted step talk to the spool through this bridge
+                from repro.core.hooks import HookBridge
+                self._hook_bridge = HookBridge(self.spool)
+                self.settings = dataclasses.replace(
+                    self.settings, hook_bridge=self._hook_bridge)
+            self._step_fn = make_host_train_step(
+                self.api, self.optimizer, self.settings)
 
     # ------------------------------------------------------------ state
 
@@ -319,8 +346,8 @@ class TrainSession:
                 ckpt_every=self.ckpt_every, keep_last=self.keep_last,
                 watchdog=StragglerWatchdog(),
                 spool=self.spool,
-                host_offload=(self.io is not None
-                              and self.io.host_offload == "opt_state"),
+                host_offload=(self.io.host_offload
+                              if self.io is not None else "none"),
                 install_signal_handlers=self.install_signal_handlers)
         self._loop.on_step = on_step
         self._loop.state = self._state
@@ -340,6 +367,8 @@ class TrainSession:
             self.trainer.close()
         if self._loop is not None:
             self._loop.close()
+        if self._hook_bridge is not None:
+            self._hook_bridge.close()      # drop aborted-step leases
         if self.engine == "jit" and self.spool is not None:
             self.spool.close()
         if self._ckpt is not None:

@@ -1,0 +1,280 @@
+"""Tests for the jit engine's per-layer activation offloading
+(repro.core.hooks): correctness vs the no-offload baseline, tensor
+forwarding under an io_callback fetch racing the store, one
+AdaptivePolicy profile driving both engines, and the staged engine's
+backward-prefetch off-by-one regression."""
+import dataclasses
+import tempfile
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import SpoolIoConfig
+from repro.configs.paper_models import small_gpt
+from repro.core.hooks import HookBridge, run_splits
+from repro.core.policies import AdaptivePolicy, JitOffloadPlan, SpoolPolicy
+from repro.core.spool import SpoolStepTransaction
+from repro.core.staged import StagedTrainer
+from repro.io import FilesystemBackend
+from repro.models.transformer import RunSettings
+from repro.session import TrainSession
+
+MIN_OFF = 2 ** 8
+
+
+def _cfg(hidden=128, layers=2):
+    return dataclasses.replace(small_gpt(hidden, layers), dtype="float32")
+
+
+def _session(engine, **kw):
+    kw.setdefault("optimizer", "adamw")
+    kw.setdefault("lr", 1e-3)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("seq_len", 32)
+    kw.setdefault("seed", 3)
+    kw.setdefault("ckpt_every", 0)
+    kw.setdefault("min_offload_elements", MIN_OFF)
+    return TrainSession(_cfg(), engine=engine, **kw)
+
+
+def _keep_settings():
+    return RunSettings(attn_impl="xla", attn_chunk=256,
+                       activation_policy="keep", param_dtype="float32")
+
+
+# ------------------------------------------------- jit activations mode
+
+@pytest.fixture(scope="module")
+def jit_baseline():
+    """No-offload jit run (residuals kept on device): 3 steps."""
+    with _session("jit", settings=_keep_settings()) as sess:
+        result = sess.run(3)
+        return {"losses": result.losses, "params": result.state.params}
+
+
+def test_jit_activations_matches_no_offload_baseline(jit_baseline):
+    """host_offload="activations" must be math-transparent: per-step
+    losses bitwise-equal to the no-offload jit baseline, final params
+    equal up to XLA fusion noise (the hook path compiles a differently
+    fused backward), and real residual bytes on the backend."""
+    with _session("jit", io=SpoolIoConfig(
+            backend="mem", host_offload="activations")) as sess:
+        result = sess.run(3)
+        stats = dataclasses.replace(sess.spool.stats)
+        io_writes = sess.spool.backend.stats.num_writes
+        leftover = dict(sess.spool._records)
+    assert result.losses == jit_baseline["losses"]     # bitwise
+    for a, b in zip(jax.tree.leaves(jit_baseline["params"]),
+                    jax.tree.leaves(result.state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    # per-segment residuals really landed on the configured backend
+    assert stats.bytes_offloaded > 0
+    assert io_writes > 0
+    assert stats.num_stores > 0
+    # every step lease was consumed: no records strand on the spool
+    assert not leftover
+
+
+def test_jit_vs_staged_parity_with_activations():
+    """Same arch/seed through one front door: the staged (TBA) engine
+    and the jit engine with per-layer activation offloading train to
+    matching losses."""
+    with _session("staged") as sess:
+        staged = sess.run(3).losses
+    with _session("jit", io=SpoolIoConfig(
+            backend="mem", host_offload="activations")) as sess:
+        hooked = sess.run(3).losses
+    assert np.all(np.isfinite(staged)) and np.all(np.isfinite(hooked))
+    np.testing.assert_allclose(staged, hooked, rtol=5e-3)
+
+
+def test_forwarding_under_fetch_racing_store(jit_baseline):
+    """A backward io_callback fetch that catches the store still queued
+    or in flight must forward the in-memory reference (§3.3.2) — and
+    the math stays exact either way."""
+    with _session("jit", io=SpoolIoConfig(
+            backend="fs", store_threads=1, bandwidth_limit=2e6,
+            host_offload="activations")) as sess:
+        result = sess.run(2)
+        stats = dataclasses.replace(sess.spool.stats)
+    assert stats.bytes_forwarded > 0
+    assert result.losses == jit_baseline["losses"][:2]  # still bitwise
+
+
+def test_activations_mode_cli_flag_roundtrip():
+    io = SpoolIoConfig(backend="mem", host_offload="activations")
+    assert io.validate() is io
+    with pytest.raises(AssertionError):
+        SpoolIoConfig(host_offload="everything").validate()
+
+
+def test_activations_with_non_spool_settings_rejected():
+    """host_offload="activations" + explicit settings that never engage
+    the hooks must raise, not silently train with zero offload."""
+    with pytest.raises(ValueError, match="activation_policy"):
+        TrainSession(_cfg(), engine="jit", settings=_keep_settings(),
+                     io=SpoolIoConfig(backend="mem",
+                                      host_offload="activations"))
+
+
+def test_encdec_spools_encoder_and_decoder_residuals():
+    """Cross-attention segments close over the encoder states; the
+    hooks must thread them as an explicit custom_vjp input (carry) or
+    trace-time differentiation fails — and both streams' residuals
+    should hit the backend."""
+    from repro.configs.paper_models import small_t5
+    cfg = dataclasses.replace(small_t5(), dtype="float32")
+    rng = np.random.default_rng(0)
+
+    def batches():
+        return [{"tokens": rng.integers(0, 100, (2, 16)),
+                 "enc_tokens": rng.integers(0, 100, (2, 16)),
+                 "labels": rng.integers(0, 100, (2, 16))}
+                for _ in range(2)]
+
+    with TrainSession(cfg, engine="jit", seed=0, ckpt_every=0,
+                      loader=batches(), min_offload_elements=2 ** 6,
+                      io=SpoolIoConfig(backend="mem",
+                                       host_offload="activations")) as s:
+        hooked = s.run(2)
+        stats = dataclasses.replace(s.spool.stats)
+    assert np.all(np.isfinite(hooked.losses))
+    assert stats.num_stores > 0
+    rng = np.random.default_rng(0)       # same batch stream
+    with TrainSession(cfg, engine="jit", seed=0, ckpt_every=0,
+                      loader=batches(),
+                      settings=RunSettings(
+                          attn_impl="xla", attn_chunk=256,
+                          activation_policy="keep",
+                          param_dtype="float32")) as s:
+        base = s.run(2)
+    np.testing.assert_allclose(hooked.losses, base.losses, rtol=1e-5)
+
+
+# --------------------------------------- one policy, both engines
+
+def test_adaptive_plan_drives_both_engines():
+    """Profile once on the staged engine, then translate the same plan
+    into jit RunSettings via plan_for_jit()."""
+    pol = AdaptivePolicy()
+    with pytest.raises(RuntimeError):
+        pol.plan_for_jit()          # no profile digested yet
+    with _session("staged", policy=pol) as sess:
+        staged_losses = sess.run(2).losses
+    assert pol.plan is not None
+    jplan = pol.plan_for_jit()
+    assert isinstance(jplan, JitOffloadPlan)
+    assert len(jplan.spool_stages) == 2          # one entry per layer
+    assert jplan.write_bw == pol.plan.write_bw
+
+    settings = jplan.apply(_keep_settings())
+    if jplan.activation_policy == "spool":
+        assert settings.spool_stages == jplan.spool_stages
+        with _session("jit", settings=settings, io=SpoolIoConfig(
+                backend="mem", host_offload="activations")) as sess:
+            jit_losses = sess.run(2).losses
+            assert sess.spool.stats.num_stores > 0
+    else:                            # plan kept everything on device
+        assert settings.spool_stages is None
+        with _session("jit", settings=settings) as sess:
+            jit_losses = sess.run(2).losses
+    assert np.all(np.isfinite(staged_losses))
+    np.testing.assert_allclose(staged_losses, jit_losses, rtol=5e-3)
+
+
+def test_run_splits_groups_contiguous_choices():
+    assert run_splits([True, True, False, True]) == [
+        (0, 2, True), (2, 3, False), (3, 4, True)]
+    assert run_splits([False, False]) == [(0, 2, False)]
+    assert run_splits([]) == []
+
+
+def test_partial_spool_stages_mask():
+    """A mixed keep/offload plan splits the scanned stack but must not
+    change the math."""
+    settings = dataclasses.replace(
+        _keep_settings(), activation_policy="spool",
+        spool_stages=(True, False))
+    with _session("jit", settings=settings, io=SpoolIoConfig(
+            backend="mem", host_offload="activations")) as sess:
+        masked = sess.run(2)
+        stats = dataclasses.replace(sess.spool.stats)
+    with _session("jit", settings=_keep_settings()) as sess:
+        base = sess.run(2)
+    assert masked.losses == base.losses            # bitwise
+    assert stats.num_stores > 0                    # layer 0 still spools
+
+
+# ------------------------------------- staged backward-prefetch fix
+
+class _SlowReadBackend(FilesystemBackend):
+    """Filesystem backend whose reads take `delay` seconds — makes the
+    cost of a cold (non-prefetched) load deterministic."""
+
+    def __init__(self, directory, delay):
+        super().__init__(directory)
+        self.delay = delay
+
+    def read(self, key):
+        time.sleep(self.delay)
+        return super().read(key)
+
+
+def _staged_wait(delay, monkeypatch, *, simulate_bug):
+    from repro.models.api import build_model
+    from repro.optim.optimizers import sgd
+
+    if simulate_bug:
+        orig = SpoolStepTransaction.prefetch
+
+        def skip_stage0(self, stage):
+            if stage == 0:
+                return              # the old `si - 1 > 0` behavior
+            orig(self, stage)
+
+        monkeypatch.setattr(SpoolStepTransaction, "prefetch", skip_stage0)
+    api = build_model(_cfg(128, 2))
+    settings = RunSettings(attn_impl="xla", attn_chunk=32,
+                           param_dtype="float32")
+    backend = _SlowReadBackend(tempfile.mkdtemp(prefix="slow_spool_"),
+                               delay)
+    # threshold low enough that the embed stage's residuals (the token
+    # indices) spool too — stage 0 is the stage the off-by-one skipped
+    tr = StagedTrainer(api, settings, sgd(1e-2), policy=SpoolPolicy(),
+                       backend=backend, min_offload_elements=16)
+    try:
+        params = api.init(jax.random.key(0))
+        opt_state = tr.optimizer.init(params)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, 100, (2, 32)),
+                 "labels": rng.integers(0, 100, (2, 32))}
+        _, _, rep = tr.train_step(params, opt_state, [batch])
+        assert np.isfinite(rep.loss)
+        return tr.spool.stats.fetch_wait_time
+    finally:
+        monkeypatch.undo()
+        tr.close()
+
+
+def test_backward_prefetch_covers_stage0(monkeypatch):
+    """Regression for the `si - 1 > 0` off-by-one: stage 0 (embed) must
+    be prefetched one module ahead like every other stage, so its fetch
+    no longer pays a cold blocking load — fetch_wait_time drops by about
+    one full read delay vs the buggy behavior."""
+    prefetched = []
+    orig = SpoolStepTransaction.prefetch
+
+    def spy(self, stage):
+        prefetched.append(stage)
+        orig(self, stage)
+
+    monkeypatch.setattr(SpoolStepTransaction, "prefetch", spy)
+    delay = 0.2
+    fixed_wait = _staged_wait(delay, monkeypatch, simulate_bug=False)
+    assert 0 in prefetched          # embed stage now prefetched
+    buggy_wait = _staged_wait(delay, monkeypatch, simulate_bug=True)
+    # the buggy path pays one extra cold load on the critical path
+    assert buggy_wait - fixed_wait > 0.5 * delay, (buggy_wait, fixed_wait)

@@ -80,3 +80,46 @@ def test_metrics_jsonl_written():
     lines = [json.loads(l) for l in open(path)]
     assert len(lines) == 5
     assert all("step_time_s" in l and "loss" in l for l in lines)
+
+
+def _finite_loop(batches, ckpt_dir, metrics=None):
+    def step_fn(params, opt_state, batch):
+        g = jnp.asarray(batch["tokens"], jnp.float32).mean()
+        params = {"w": params["w"] - 0.01 * (params["w"] - g)}
+        return params, opt_state, {"loss": float(params["w"].sum())}
+
+    return TrainLoop(
+        step_fn=step_fn,
+        init_state=TrainState(0, {"w": jnp.zeros((2,))}, {}),
+        loader=batches, ckpt_dir=ckpt_dir, ckpt_every=0,
+        metrics_path=metrics)
+
+
+def test_loader_exhaustion_ends_cleanly_with_final_checkpoint():
+    """Regression: `next(it)` let StopIteration escape run(), skipping
+    the final checkpoint (and the staged-opt-state rematerialization).
+    A dry loader must end the loop cleanly instead."""
+    d = tempfile.mkdtemp()
+    batches = [{"tokens": np.full((2, 4), i)} for i in range(3)]
+    loop = _finite_loop(batches, d)
+    final = loop.run(10)            # asks for more steps than data
+    loop.close()
+    assert final.step == 3          # every batch consumed, then stop
+    assert loop.ckpt.latest_step() == 3   # final checkpoint committed
+
+
+def test_tokens_per_s_masks_padding():
+    """Regression: tokens/s counted padded positions. With labels
+    present, only labels >= 0 are real targets."""
+    import json
+    d = tempfile.mkdtemp()
+    path = os.path.join(d, "metrics.jsonl")
+    labels = np.full((2, 8), -1)
+    labels[:, :3] = 5               # 6 real targets out of 16 positions
+    batches = [{"tokens": np.zeros((2, 8), np.int32), "labels": labels}]
+    loop = _finite_loop(batches, d, metrics=path)
+    loop.run(1)
+    loop.close()
+    rec = json.loads(open(path).readline())
+    tokens = rec["tokens_per_s"] * rec["step_time_s"]
+    assert abs(tokens - 6) < 1e-6 * 6, rec

@@ -216,6 +216,27 @@ def test_peek_does_not_cancel_pending_store():
     spool.close()
 
 
+def test_prefetch_after_cancelled_store_skips_ghost_load():
+    """Regression: prefetch on a record whose store was cancelled (its
+    arrays still resident) used to enqueue a load for a blob that was
+    never written — a ghost read that buried the backend error on the
+    load job. CANCELED-with-arrays is in-memory: no load."""
+    spool, _ = _spool(bandwidth_limit=1e6, store_threads=1)
+    spool.offload("a", _tree(1))    # occupies the single store thread
+    t = _tree(2)
+    spool.offload("b", t)           # queued
+    spool.fetch("b")                # forwards + cancels the write
+    assert spool.stats.stores_canceled == 1
+    spool.prefetch("b")             # must NOT enqueue a load
+    assert spool._records["b"]["load_job"] is None
+    out = spool.fetch("b")          # forwards the resident arrays
+    for a, b in zip(t, out):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    spool.wait_io()
+    assert spool.stats.num_loads == 0
+    spool.close()
+
+
 def test_refetch_after_cancel_forwards_resident_arrays():
     spool, _ = _spool(bandwidth_limit=1e6, store_threads=1)
     spool.offload("a", _tree(1))        # occupies the single store thread
