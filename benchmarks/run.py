@@ -11,7 +11,7 @@ import sys
 import time
 
 MODULES = ["fig9_endurance", "table4_offload", "fig10_overhead",
-           "fig11_rok", "io_backends", "roofline"]
+           "fig11_rok", "io_backends", "spool_datapath", "roofline"]
 
 
 def main() -> None:

@@ -157,8 +157,16 @@ class SpoolIoConfig:
 
     backend: "fs" (one directory / one SSD), "striped" (round-robin
     chunks across `stripe_dirs`, a multi-SSD array), "mem" (host RAM),
-    or "tiered" (RAM under `host_mem_budget_bytes`, spilling to a lower
-    fs/striped backend).
+    "tiered" (RAM under `host_mem_budget_bytes`, spilling to a lower
+    fs/striped backend), or "aio" (O_DIRECT-style direct I/O from a
+    pooled aligned buffer with `queue_depth` concurrent segment
+    submission; falls back to buffered+fdatasync+fadvise where the
+    filesystem rejects O_DIRECT).
+
+    The data-plane knobs apply to every backend: `alignment` and
+    `pool_bytes` size the shared `AlignedBufferPool` that loads (and
+    aio stores) stage through; `queue_depth` is the aio backend's
+    per-blob submission depth.
 
     host_offload: what the jit engine routes through the spool —
     "none" (spool unused by the jit engine; the staged engine ignores
@@ -170,20 +178,33 @@ class SpoolIoConfig:
     directory: Optional[str] = None        # None -> fresh temp dir
     stripe_dirs: Tuple[str, ...] = ()
     stripe_chunk_bytes: int = 4 << 20
-    codec: str = "raw"                     # raw | zlib
+    codec: str = "raw"                     # raw | zlib | byteplane
     host_mem_budget_bytes: int = 256 << 20
     store_threads: int = 4
     load_threads: int = 4
     bandwidth_limit: Optional[float] = None
     host_offload: str = "none"      # none | opt_state | activations (jit)
+    # --- data-plane knobs (buffer pool / direct I/O) ---
+    alignment: int = 4096           # pool + O_DIRECT alignment
+    queue_depth: int = 4            # aio: concurrent segments per blob
+    pool_bytes: int = 256 << 20     # idle cap of the aligned pool
 
     def validate(self) -> "SpoolIoConfig":
-        assert self.backend in ("fs", "striped", "mem", "tiered"), \
-            self.backend
+        assert self.backend in ("fs", "striped", "mem", "tiered",
+                                "aio"), self.backend
         assert self.stripe_chunk_bytes > 0
         assert self.host_mem_budget_bytes >= 0
         assert self.host_offload in ("none", "opt_state", "activations"), \
             self.host_offload
+        import mmap
+        assert self.alignment > 0 and \
+            (self.alignment & (self.alignment - 1)) == 0, \
+            f"alignment must be a power of two, got {self.alignment}"
+        assert self.alignment <= mmap.PAGESIZE, \
+            (f"alignment {self.alignment} exceeds the page size "
+             f"{mmap.PAGESIZE} that mmap-backed pool buffers guarantee")
+        assert self.queue_depth >= 1, self.queue_depth
+        assert self.pool_bytes >= 0, self.pool_bytes
         if self.backend == "striped":
             assert len(self.stripe_dirs) != 1, \
                 "striping across one directory is just 'fs'"

@@ -35,8 +35,10 @@ import jax
 from repro.core.accounting import MemoryTracker
 from repro.core.adaptive import TierBandwidth
 from repro.core.ids import TensorIdRegistry, _buffer_key
-from repro.io import (Codec, FilesystemBackend, StorageBackend, get_codec,
-                      pack_parts, unpack)
+from repro.io import (Codec, FilesystemBackend, StorageBackend,
+                      encode_parts, get_codec, pack_parts, unpack,
+                      unpack_aliased)
+from repro.io.bufpool import DEFAULT_ALIGNMENT, AlignedBufferPool
 from repro.io.serde import (deserialize_leaves, serialize_leaves,
                             serialize_parts)
 
@@ -47,7 +49,8 @@ QUEUED, RUNNING, DONE, CANCELED = range(4)
 def build_spool(io_config=None, *, backend=None, spool_dir=None,
                 codec=None, store_threads=None, load_threads=None,
                 bandwidth_limit=None, tracker=None,
-                min_offload_elements=None):
+                min_offload_elements=None, pool_bytes=None,
+                alignment=None):
     """One spool-construction path for every engine.
 
     Storage selection, most specific wins: an explicit StorageBackend >
@@ -68,6 +71,10 @@ def build_spool(io_config=None, *, backend=None, spool_dir=None,
             load_threads = io_config.load_threads
         if bandwidth_limit is None:
             bandwidth_limit = io_config.bandwidth_limit
+        if pool_bytes is None:
+            pool_bytes = getattr(io_config, "pool_bytes", None)
+        if alignment is None:
+            alignment = getattr(io_config, "alignment", None)
     if backend is None:
         if spool_dir is None:
             spool_dir = tempfile.mkdtemp(prefix="tba_spool_")
@@ -80,7 +87,10 @@ def build_spool(io_config=None, *, backend=None, spool_dir=None,
         bandwidth_limit=bandwidth_limit, tracker=tracker,
         min_offload_elements=(MIN_OFFLOAD_ELEMENTS
                               if min_offload_elements is None
-                              else min_offload_elements))
+                              else min_offload_elements),
+        pool_bytes=(256 << 20 if pool_bytes is None else pool_bytes),
+        alignment=(DEFAULT_ALIGNMENT if alignment is None
+                   else alignment))
     return spool, owned
 
 # paper Algorithm 2 line 12: tensors smaller than 2**20 elements stay put
@@ -115,8 +125,10 @@ class SpoolStats:
 
     @property
     def write_bandwidth(self) -> float:
+        # 0.0, not inf, before the first store completes: dryrun /
+        # roofline reports print this, and "inf GB/s" is a lie
         return self.bytes_offloaded / self.store_time \
-            if self.store_time else float("inf")
+            if self.store_time else 0.0
 
 
 class _Job:
@@ -256,7 +268,10 @@ class ActivationSpool:
                  bandwidth_limit: Optional[float] = None,
                  tracker: Optional[MemoryTracker] = None,
                  registry: Optional[TensorIdRegistry] = None,
-                 min_offload_elements: int = MIN_OFFLOAD_ELEMENTS):
+                 min_offload_elements: int = MIN_OFFLOAD_ELEMENTS,
+                 pool: Optional[AlignedBufferPool] = None,
+                 pool_bytes: int = 256 << 20,
+                 alignment: int = DEFAULT_ALIGNMENT):
         # A bare directory string keeps the seed call shape:
         # ActivationSpool("/path/to/dir") == filesystem backend there.
         if isinstance(backend, str):
@@ -264,6 +279,13 @@ class ActivationSpool:
         self.backend = backend
         self.dir = getattr(backend, "directory", None)
         self.codec = get_codec(codec)
+        # One aligned pool serves the whole data plane: loads readinto
+        # leased buffers (no per-load blob allocation), and an aio
+        # backend stages its O_DIRECT writes from the same pool.
+        backend_pool = getattr(backend, "pool", None)
+        self.pool = pool or backend_pool or \
+            AlignedBufferPool(alignment=alignment, max_bytes=pool_bytes)
+        self._owns_pool = pool is None and backend_pool is None
         self.min_offload_elements = min_offload_elements
         self.tracker = tracker or MemoryTracker()
         self.registry = registry or TensorIdRegistry()
@@ -351,7 +373,7 @@ class ActivationSpool:
                     "keep": {i: leaves[i] for i in keep_idx},
                     "spool_idx": [], "n_leaves": len(leaves), "job": None,
                     "nbytes": 0, "loaded": None, "load_job": None,
-                    "acquired": acquired,
+                    "load_lease": None, "acquired": acquired,
                 }
             return
         self.tracker.alloc((key, "s"), nbytes, tag=f"residual:{key}")
@@ -361,7 +383,8 @@ class ActivationSpool:
                 "treedef": treedef, "keep": {i: leaves[i] for i in keep_idx},
                 "spool_idx": spool_idx, "n_leaves": len(leaves),
                 "job": job, "nbytes": nbytes, "loaded": None,
-                "load_job": None, "acquired": acquired,
+                "load_job": None, "load_lease": None,
+                "acquired": acquired,
             }
         self._store_q.put(job)
 
@@ -377,7 +400,7 @@ class ActivationSpool:
                 "treedef": treedef, "keep": dict(enumerate(leaves)),
                 "spool_idx": [], "n_leaves": len(leaves), "job": None,
                 "nbytes": nbytes, "loaded": None, "load_job": None,
-                "acquired": [],
+                "load_lease": None, "acquired": [],
             }
 
     def prefetch(self, key) -> None:
@@ -439,7 +462,12 @@ class ActivationSpool:
                     # still referenced — forward them rather than chase
                     # a blob that was never written
                     spooled = job.arrays
-                    self.stats.bytes_forwarded += _nbytes(spooled)
+                    if not rec.get("fwd_counted"):
+                        # same one-event rule as the healthy branch: a
+                        # peek-then-fetch of a failed store is ONE
+                        # forwarding, not two
+                        rec["fwd_counted"] = True
+                        self.stats.bytes_forwarded += _nbytes(spooled)
             if spooled is None:
                 with self._lock:
                     lj = rec["load_job"]
@@ -466,8 +494,16 @@ class ActivationSpool:
             leaves[i] = leaf
         if rec["spool_idx"]:
             for i, leaf in zip(rec["spool_idx"], spooled):
-                leaves[i] = jax.numpy.asarray(leaf) \
-                    if isinstance(leaf, np.ndarray) else leaf
+                if isinstance(leaf, np.ndarray):
+                    if not leaf.flags.writeable:
+                        # copy-on-demand: pooled-load leaves are
+                        # zero-copy views over a buffer the pool will
+                        # reuse after drop(); jnp.asarray may ALIAS an
+                        # aligned host array instead of copying, so
+                        # detach here, exactly once, at materialization
+                        leaf = leaf.copy()
+                    leaf = jax.numpy.asarray(leaf)
+                leaves[i] = leaf
         return jax.tree.unflatten(rec["treedef"], leaves)
 
     def drop(self, key) -> None:
@@ -481,6 +517,13 @@ class ActivationSpool:
             self.registry.release_key(bkey)
         self.tracker.free((key, "s"), tag=f"consumed:{key}")
         self.tracker.free((key, "k"), tag=f"consumed:{key}")
+        lease = rec.get("load_lease")
+        if lease is not None:
+            # the record's loaded views die with the record; hand the
+            # pooled buffer to the next load
+            rec["loaded"] = None
+            rec["load_lease"] = None
+            lease.release()
         if not rec["spool_idx"]:
             return
         job = rec["job"]
@@ -587,6 +630,17 @@ class ActivationSpool:
             t.join()
         self._threads = []
         self.backend.close()
+        if self._owns_pool:
+            self.pool.close()
+
+    def data_plane_stats(self) -> Dict[str, Any]:
+        """One dict for the whole byte path: backend I/O (incl. host
+        copies-per-byte) + aligned-pool reuse. This is where the
+        'zero per-job large allocations' claim becomes a number."""
+        return {
+            "backend": self.backend.stats.as_dict(),
+            "pool": self.pool.stats(),
+        }
 
     # --------------------------------------------------------- workers
 
@@ -617,15 +671,21 @@ class ActivationSpool:
         t0 = time.perf_counter()
         if job.kind == "store":
             arrays = [np.asarray(a) for a in job.arrays]
-            data = pack_parts(serialize_parts(arrays), self.codec)
-            self.backend.write(str(job.key), data)
+            # vectored store: the serde part list flows through the
+            # codec container straight to backend.write_parts — with the
+            # raw codec on a vectored backend the payload is never
+            # joined or copied on the host at all
+            parts = encode_parts(serialize_parts(arrays), self.codec)
+            nbytes = sum(len(p) if not isinstance(p, memoryview)
+                         else p.nbytes for p in parts)
+            self.backend.write_parts(str(job.key), parts)
             dt = time.perf_counter() - t0
             if self._bw:
-                min_t = len(data) / self._bw
+                min_t = nbytes / self._bw
                 if dt < min_t:
                     time.sleep(min_t - dt)
                     dt = min_t
-            self.stats.bytes_offloaded += len(data)
+            self.stats.bytes_offloaded += nbytes
             self.stats.bytes_offloaded_logical += \
                 sum(a.nbytes for a in arrays)
             self.stats.store_time += dt
@@ -647,21 +707,62 @@ class ActivationSpool:
                     if job.key not in self._records:
                         self.backend.delete(str(job.key))
         else:
-            data = self.backend.read(str(job.key))
-            arrays = deserialize_leaves(unpack(data))
+            key = str(job.key)
+            # pooled load: size the blob, readinto a leased aligned
+            # buffer, and deserialize zero-copy views over it. The
+            # lease lives until the record is dropped (fetch copies on
+            # demand when it materializes device arrays).
+            lease = None
+            # RAM-backed stores hand the blob back by reference — a
+            # pooled staging copy would only ADD a memcpy there
+            nbytes = None if self.backend.zero_copy_read \
+                else self.backend.size(key)
+            if nbytes is not None and nbytes > 0:
+                lease = self.pool.acquire(nbytes)
+                try:
+                    blob = self.backend.readinto(key, lease.mv)
+                except BaseException:
+                    lease.release()
+                    raise
+                nread = len(blob)
+            else:
+                blob = self.backend.read(key)
+                nread = len(blob)
+            try:
+                payload, aliases = unpack_aliased(blob)
+                # non-aliasing payloads (codec decodes) own fresh
+                # memory: leave the views writable so fetch's
+                # copy-on-demand doesn't pay a redundant memcpy
+                arrays = deserialize_leaves(payload, copy=False,
+                                            pinned=aliases)
+            except BaseException:
+                if lease is not None:
+                    lease.release()
+                raise
+            if lease is not None and not aliases:
+                # decoding codecs hand back fresh memory: nothing
+                # borrows the pooled buffer, recycle it immediately
+                # instead of pinning it until drop()
+                lease.release()
+                lease = None
             dt = time.perf_counter() - t0
             if self._bw:
-                min_t = len(data) / self._bw
+                min_t = nread / self._bw
                 if dt < min_t:
                     time.sleep(min_t - dt)
                     dt = min_t
-            self.stats.bytes_loaded += len(data)
+            self.stats.bytes_loaded += nread
             self.stats.load_time += dt
             self.stats.num_loads += 1
             with self._lock:
                 rec = self._records.get(job.key)
                 if rec is not None:
                     rec["loaded"] = arrays
+                    rec["load_lease"] = lease
+                elif lease is not None:
+                    # record dropped while we were loading: nobody will
+                    # ever release this lease through drop()
+                    lease.release()
             with job.cond:
                 job.state = DONE
                 job.cond.notify_all()

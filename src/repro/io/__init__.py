@@ -2,34 +2,47 @@
 
 Layering (bottom up):
 
-  serde    arrays <-> bytes (writable on the way back)
-  codecs   bytes <-> bytes (raw / zlib), self-describing container
-  backend  StorageBackend interface + IoStats + registry
+  serde    arrays <-> bytes parts (zero-copy out, view-or-copy back)
+  codecs   bytes <-> bytes (raw / zlib / byteplane), self-describing
+           vectored container (`encode_parts`)
+  bufpool  aligned reusable host buffers (the anti-churn layer)
+  backend  StorageBackend interface (write/write_parts/read/readinto)
+           + IoStats (incl. copy accounting) + registry
   backends fs | striped | mem | tiered implementations
+  aio      O_DIRECT-style direct I/O with depth-N submission
   factory  SpoolIoConfig / spec-string -> backend construction
 
-`core/spool.py` composes these: serialize -> pack(codec) -> backend.write
-on the store path, and the inverse on load.
+`core/spool.py` composes these: serialize_parts -> encode_parts(codec)
+-> backend.write_parts on the store path (zero payload copies for the
+raw codec on vectored backends), and readinto a pooled buffer ->
+deserialize_leaves(copy=False) views on the load path.
 """
+from repro.io.aio import AioBackend
 from repro.io.backend import (BACKENDS, NOMINAL_WRITE_BW, IoStats,
-                              StorageBackend, get_backend_cls,
+                              StorageBackend, as_memoryviews,
+                              get_backend_cls, preadv_all, pwritev_all,
                               register_backend)
 from repro.io.backends import (FilesystemBackend, HostMemoryBackend,
                                StripedBackend, TieredBackend)
-from repro.io.codecs import (CODECS, Codec, RawCodec, ZlibCodec,
-                             get_codec, pack, pack_parts, register_codec,
-                             unpack)
+from repro.io.bufpool import AlignedBufferPool, PooledBuffer
+from repro.io.codecs import (CODECS, BytePlaneCodec, Codec, RawCodec,
+                             ZlibCodec, encode_parts, get_codec, pack,
+                             pack_parts, register_codec, unpack,
+                             unpack_aliased)
 from repro.io.factory import backend_from_spec, build_backend, parse_bytes
 from repro.io.serde import (deserialize_leaves, serialize_leaves,
                             serialize_parts)
 
 __all__ = [
     "BACKENDS", "NOMINAL_WRITE_BW", "IoStats", "StorageBackend",
-    "get_backend_cls", "register_backend",
-    "FilesystemBackend", "HostMemoryBackend", "StripedBackend",
-    "TieredBackend",
-    "CODECS", "Codec", "RawCodec", "ZlibCodec", "get_codec", "pack",
-    "pack_parts", "register_codec", "unpack",
+    "get_backend_cls", "register_backend", "as_memoryviews",
+    "preadv_all", "pwritev_all",
+    "AioBackend", "FilesystemBackend", "HostMemoryBackend",
+    "StripedBackend", "TieredBackend",
+    "AlignedBufferPool", "PooledBuffer",
+    "CODECS", "BytePlaneCodec", "Codec", "RawCodec", "ZlibCodec",
+    "encode_parts", "get_codec", "pack", "pack_parts", "register_codec",
+    "unpack", "unpack_aliased",
     "backend_from_spec", "build_backend", "parse_bytes",
     "deserialize_leaves", "serialize_leaves", "serialize_parts",
 ]

@@ -10,13 +10,25 @@ import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.adaptive import TierBandwidth
-from repro.io.backend import StorageBackend, register_backend
+from repro.io.backend import (StorageBackend, as_memoryviews, preadv_all,
+                              pwritev_all, register_backend)
 
 
 @register_backend("fs")
 class FilesystemBackend(StorageBackend):
     """One blob file per key in one directory — the seed ActivationSpool
-    path, extracted. The directory stands in for a single SSD."""
+    path, extracted. The directory stands in for a single SSD.
+
+    Writes are vectored (`os.pwritev` over the serde part list, no
+    monolithic join) and rename-atomic: the blob lands in a
+    same-directory temp file that is `os.replace`d over the real name
+    only once fully written, so a *process* crash mid-store can never
+    leave a truncated blob under the final name for
+    `deserialize_leaves` to misparse on restart. (Power loss is weaker:
+    without a per-store fsync — unaffordable per residual — the journal
+    may commit the rename before the data lands; serde's truncation
+    guard then rejects the torn blob loudly instead.) Reads can scatter
+    straight into a caller-owned buffer (`readinto`)."""
 
     def __init__(self, directory: str):
         super().__init__()
@@ -26,13 +38,53 @@ class FilesystemBackend(StorageBackend):
     def _path(self, key: str) -> str:
         return os.path.join(self.directory, f"{key}.act")
 
+    def _tmp_path(self, key: str) -> str:
+        # pid+tid suffix: concurrent writers of *different* keys (the
+        # spool's store pool) must not collide on temp names
+        return (self._path(key)
+                + f".tmp.{os.getpid()}.{threading.get_ident()}")
+
     def _write(self, key: str, data: bytes) -> None:
-        with open(self._path(key), "wb") as f:
-            f.write(data)
+        self._write_parts(key, as_memoryviews([data]))
+
+    def _write_parts(self, key: str, parts: List[memoryview]) -> None:
+        tmp = self._tmp_path(key)
+        fd = os.open(tmp, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+        try:
+            pwritev_all(fd, parts)
+        except BaseException:
+            os.close(fd)
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        os.close(fd)
+        os.replace(tmp, self._path(key))
 
     def _read(self, key: str) -> bytes:
         with open(self._path(key), "rb") as f:
             return f.read()
+
+    def _readinto(self, key: str, buf: memoryview) -> int:
+        fd = os.open(self._path(key), os.O_RDONLY)
+        try:
+            n = os.fstat(fd).st_size
+            if n > len(buf):
+                raise ValueError(f"buffer of {len(buf)} bytes cannot "
+                                 f"hold {n}-byte blob {key!r}")
+            got = preadv_all(fd, buf[:n])
+            if got != n:
+                raise OSError(f"short read of {key!r}: {got}/{n} bytes")
+            return got
+        finally:
+            os.close(fd)
+
+    def _size(self, key: str) -> Optional[int]:
+        try:
+            return os.stat(self._path(key)).st_size
+        except OSError:
+            return None
 
     def _delete(self, key: str) -> None:
         try:
@@ -83,15 +135,37 @@ class StripedBackend(StorageBackend):
                             f"{key}.c{i}")
 
     def _write(self, key: str, data: bytes) -> None:
-        n = max(1, -(-len(data) // self.chunk_bytes))  # ceil, >=1
-        mv = memoryview(data)      # zero-copy chunk slicing
-        for i in range(n):
-            chunk = mv[i * self.chunk_bytes:(i + 1) * self.chunk_bytes]
-            with open(self._chunk_path(key, i), "wb") as f:
-                f.write(chunk)
+        self._write_parts(key, as_memoryviews([data]))
+
+    def _write_parts(self, key: str, parts: List[memoryview]) -> None:
+        # Partition the part list into per-chunk view lists: memoryview
+        # slicing is zero-copy, so each stripe chunk is pwritev'd from
+        # the original serde buffers without assembling the blob or the
+        # chunk anywhere on the host.
+        chunks: List[List[memoryview]] = [[]]
+        room = self.chunk_bytes
+        for p in parts:
+            while len(p):
+                take = min(room, len(p))
+                chunks[-1].append(p[:take])
+                p = p[take:]
+                room -= take
+                if room == 0:
+                    chunks.append([])
+                    room = self.chunk_bytes
+        if len(chunks) > 1 and not chunks[-1]:
+            chunks.pop()
+        n = len(chunks)
+        for i, views in enumerate(chunks):
+            fd = os.open(self._chunk_path(key, i),
+                         os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+            try:
+                pwritev_all(fd, views)
+            finally:
+                os.close(fd)
             with self._dev_lock:
                 self.device_write_bytes[self._device(key, i)] += \
-                    len(chunk)
+                    sum(len(v) for v in views)
         with self._dev_lock:
             self._manifest[key] = n
         # a re-write with fewer chunks must not leave the old tail
@@ -130,6 +204,44 @@ class StripedBackend(StorageBackend):
                     len(chunk)
         return b"".join(parts)
 
+    def _readinto(self, key: str, buf: memoryview) -> int:
+        """Gather the stripe chunks directly into successive slices of
+        the caller's buffer — no per-chunk bytes objects, no join."""
+        n = self._num_chunks(key)
+        if n == 0:
+            raise FileNotFoundError(key)
+        off = 0
+        for i in range(n):
+            fd = os.open(self._chunk_path(key, i), os.O_RDONLY)
+            try:
+                sz = os.fstat(fd).st_size
+                if off + sz > len(buf):
+                    raise ValueError(
+                        f"buffer of {len(buf)} bytes cannot hold "
+                        f"striped blob {key!r} (>= {off + sz} bytes)")
+                got = preadv_all(fd, buf[off:off + sz])
+                if got != sz:
+                    raise OSError(f"short read of {key!r} chunk {i}: "
+                                  f"{got}/{sz} bytes")
+            finally:
+                os.close(fd)
+            with self._dev_lock:
+                self.device_read_bytes[self._device(key, i)] += sz
+            off += sz
+        return off
+
+    def _size(self, key: str) -> Optional[int]:
+        n = self._num_chunks(key)
+        if n == 0:
+            return None
+        total = 0
+        for i in range(n):
+            try:
+                total += os.stat(self._chunk_path(key, i)).st_size
+            except OSError:
+                return None
+        return total
+
     def _delete(self, key: str) -> None:
         n = self._num_chunks(key)
         with self._dev_lock:
@@ -151,10 +263,19 @@ class HostMemoryBackend(StorageBackend):
     fastest tier (no serialization to media); under `TieredBackend` it is
     the bounded upper level of the hierarchy."""
 
+    #: `_read` returns the stored bytes object itself — loaders can
+    #: deserialize views straight over it (immutable, refcount-kept)
+    zero_copy_read = True
+
     def __init__(self):
         super().__init__()
         self._blobs: Dict[str, bytes] = {}
         self._lock = threading.Lock()
+
+    # _write_parts/_readinto: the base-class fallbacks (join + counted
+    # copy; read + counted copy into the caller's buffer) ARE this
+    # backend's native semantics — RAM is the storage medium, so the
+    # join is the device write itself, honestly counted as a host copy.
 
     def _write(self, key: str, data: bytes) -> None:
         with self._lock:
@@ -166,6 +287,11 @@ class HostMemoryBackend(StorageBackend):
                 return self._blobs[key]
             except KeyError:
                 raise FileNotFoundError(key) from None
+
+    def _size(self, key: str) -> Optional[int]:
+        with self._lock:
+            data = self._blobs.get(key)
+        return len(data) if data is not None else None
 
     def _delete(self, key: str) -> None:
         with self._lock:
@@ -221,7 +347,23 @@ class TieredBackend(StorageBackend):
             return self._resident_bytes
 
     def _write(self, key: str, data: bytes) -> None:
-        if len(data) > self.capacity_bytes:
+        # a pre-joined blob is stored by reference in RAM: no join copy
+        self._put(key, len(data), lambda tier: tier.write(key, data))
+
+    def _write_parts(self, key: str, parts: List[memoryview]) -> None:
+        self._put(key, sum(len(p) for p in parts),
+                  lambda tier: tier.write_parts(key, parts),
+                  ram_copy=True)
+
+    def _put(self, key: str, nbytes: int, put,
+             ram_copy: bool = False) -> None:
+        """Placement engine shared by the joined and vectored write
+        paths: `put(tier)` lands the payload on the chosen tier.
+        `ram_copy` marks a part-list payload, whose RAM-tier placement
+        joins (one host copy) — counted on THIS backend's stats too, so
+        the tiered copies-per-byte number stays honest; lower-tier
+        copies live on the lower backend's own stats."""
+        if nbytes > self.capacity_bytes:
             # Oversize blobs bypass RAM. Wait out any in-flight spill of
             # this key first — the spiller's stale copy must neither
             # clobber nor delete the new lower-tier blob — and claim the
@@ -233,7 +375,7 @@ class TieredBackend(StorageBackend):
                 if nb is not None:
                     self._resident_bytes -= nb
                 self._lowered.add(key)
-            self.lower.write(key, data)
+            put(self.lower)
             if nb is not None:
                 self.upper.delete(key)
             return
@@ -246,15 +388,17 @@ class TieredBackend(StorageBackend):
         with self._lock:
             victims = []
             while self._resident and \
-                    self._resident_bytes + len(data) > self.capacity_bytes:
+                    self._resident_bytes + nbytes > self.capacity_bytes:
                 k, nb = self._resident.popitem(last=False)
                 self._resident_bytes -= nb
                 self._spilling.add(k)
                 victims.append(k)
-            self.upper.write(key, data)
+            put(self.upper)
+            if ram_copy:
+                self._note_copy(nbytes)
             prev = self._resident.pop(key, 0)
-            self._resident[key] = len(data)
-            self._resident_bytes += len(data) - prev
+            self._resident[key] = nbytes
+            self._resident_bytes += nbytes - prev
             # a stale lower copy from an earlier oversize lease of this
             # key must not outlive the resident-only delete path
             stale_lower = key in self._lowered
@@ -303,6 +447,21 @@ class TieredBackend(StorageBackend):
             return self.upper.read(key)
         except FileNotFoundError:
             return self.lower.read(key)
+
+    def _readinto(self, key: str, buf: memoryview) -> int:
+        try:
+            return len(self.upper.readinto(key, buf))
+        except FileNotFoundError:
+            return len(self.lower.readinto(key, buf))
+
+    def _size(self, key: str) -> Optional[int]:
+        with self._lock:
+            nb = self._resident.get(key)
+        if nb is not None:
+            return nb
+        # mid-spill or lowered: the same upper-then-lower order as reads
+        n = self.upper.size(key)
+        return n if n is not None else self.lower.size(key)
 
     def _delete(self, key: str) -> None:
         with self._lock:

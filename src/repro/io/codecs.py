@@ -7,13 +7,27 @@ reconfigured between write and read, and mixed-codec directories stay
 readable. Codecs trade CPU for PCIe/SSD bandwidth (the knob the paper's
 §3.4 WAF analysis motivates: fewer bytes written is both faster on a
 saturated link and linearly more SSD lifespan).
+
+The container is *vectored*: `encode_parts` returns a part list that
+the storage backends scatter to the device with `write_parts`, so the
+raw codec adds zero payload copies to the store path. Compressing
+codecs necessarily materialize their output; `byteplane` is the
+bf16/fp16-aware one — it shuffles 2-byte floats into exponent and
+mantissa byte planes and DEFLATEs only the compressible (sign+exponent)
+plane, chunked so one blob's chunks encode in parallel across a shared
+worker pool.
 """
 from __future__ import annotations
 
 import abc
+import os
 import struct
+import threading
 import zlib
-from typing import Dict, Type, Union
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Type, Union
+
+import numpy as np
 
 _MAGIC = b"RIO1"
 
@@ -23,10 +37,10 @@ class Codec(abc.ABC):
     name: str = "?"
 
     @abc.abstractmethod
-    def encode(self, data: bytes) -> bytes: ...
+    def encode(self, data) -> bytes: ...
 
     @abc.abstractmethod
-    def decode(self, data: bytes) -> bytes: ...
+    def decode(self, data): ...
 
 
 CODECS: Dict[str, Type[Codec]] = {}
@@ -54,10 +68,10 @@ def get_codec(codec: Union[str, Codec, None]) -> Codec:
 
 @register_codec("raw")
 class RawCodec(Codec):
-    def encode(self, data: bytes) -> bytes:
+    def encode(self, data):
         return data
 
-    def decode(self, data: bytes) -> bytes:
+    def decode(self, data):
         return data
 
 
@@ -70,40 +84,202 @@ class ZlibCodec(Codec):
     def __init__(self, level: int = 1):
         self.level = level
 
-    def encode(self, data: bytes) -> bytes:
+    def encode(self, data) -> bytes:
         return zlib.compress(data, self.level)
 
-    def decode(self, data: bytes) -> bytes:
-        return zlib.decompress(data)
+    def decode(self, data) -> bytearray:
+        # bytearray, not bytes: the spool deserializes decode output
+        # into zero-copy views, and a writable backing buffer lets
+        # fetch's copy-on-demand skip a redundant memcpy (bytes-backed
+        # views are read-only no matter what the caller intends)
+        return bytearray(zlib.decompress(data))
 
 
-def pack(payload: bytes, codec: Union[str, Codec, None] = None) -> bytes:
+# ------------------------------------------------------------ byteplane
+
+# shared chunk-encode pool: zlib releases the GIL, so one blob's chunks
+# really compress in parallel, and a process-wide pool keeps the thread
+# count bounded no matter how many spool store workers hold codecs
+_PLANE_EX: Optional[ThreadPoolExecutor] = None
+_PLANE_EX_LOCK = threading.Lock()
+
+
+def _plane_executor() -> ThreadPoolExecutor:
+    global _PLANE_EX
+    with _PLANE_EX_LOCK:
+        if _PLANE_EX is None:
+            _PLANE_EX = ThreadPoolExecutor(
+                max_workers=min(8, os.cpu_count() or 1),
+                thread_name_prefix="byteplane")
+        return _PLANE_EX
+
+
+@register_codec("byteplane")
+class BytePlaneCodec(Codec):
+    """Byte-plane shuffle + selective DEFLATE for 2-byte float payloads.
+
+    bf16/fp16 activations are (little-endian) `[mantissa-low,
+    sign|exponent-high]` byte pairs: the high plane is a handful of
+    distinct values per tensor (low entropy — residual magnitudes
+    cluster), the low plane is mantissa noise DEFLATE cannot touch.
+    zlib over the interleaved stream wastes its window re-discovering
+    that; splitting the planes and compressing ONLY the high plane gets
+    a better ratio at half the DEFLATE input — measurably better ratio
+    *and* throughput than `zlib` on real residuals.
+
+    The payload is processed in `chunk_bytes` chunks, each shuffled and
+    deflated independently on a shared worker pool (parallel encode for
+    large blobs, bounded scratch memory), with a per-chunk raw escape
+    hatch when DEFLATE does not pay (fp32-heavy or random chunks).
+
+    Container: ``BPL1 | u8 level | u64 total | u32 nchunks`` then per
+    chunk ``u8 flag | u32 clen | u32 hi_len`` + payload (flag 0: clen
+    raw bytes; flag 1: ceil(clen/2) low-plane bytes + hi_len deflated
+    high-plane bytes). Lossless for every dtype — fp32 payloads just
+    land on the raw escape more often.
+    """
+
+    MAGIC = b"BPL1"
+    _HEAD = struct.Struct("<BQI")       # level, total bytes, nchunks
+    _CHUNK = struct.Struct("<BII")      # flag, clen, hi_len
+
+    def __init__(self, level: int = 1, chunk_bytes: int = 1 << 20,
+                 parallel: bool = True):
+        if chunk_bytes <= 0:
+            raise ValueError("chunk_bytes must be positive")
+        self.level = level
+        self.chunk_bytes = chunk_bytes
+        self.parallel = parallel
+
+    # ------------------------------------------------------------ encode
+
+    def _encode_chunk(self, chunk: np.ndarray):
+        lo = np.ascontiguousarray(chunk[0::2])
+        hi = np.ascontiguousarray(chunk[1::2])
+        comp = zlib.compress(hi, self.level)
+        if len(comp) >= hi.nbytes:
+            # incompressible high plane: store the chunk verbatim (the
+            # shuffle alone buys nothing and costs a decode pass)
+            return (0, chunk, b"")
+        return (1, lo, comp)
+
+    def _map(self, fn, jobs: List):
+        if self.parallel and len(jobs) > 1:
+            return list(_plane_executor().map(fn, jobs))
+        return [fn(j) for j in jobs]
+
+    def encode(self, data) -> bytes:
+        arr = np.frombuffer(data, dtype=np.uint8)
+        n = arr.nbytes
+        chunks = [arr[o:o + self.chunk_bytes]
+                  for o in range(0, n, self.chunk_bytes)] or \
+                 [arr]                   # one empty chunk for n == 0
+        encoded = self._map(self._encode_chunk, chunks)
+        out: List[bytes] = [self.MAGIC,
+                            self._HEAD.pack(self.level, n, len(chunks))]
+        for (flag, first, comp), chunk in zip(encoded, chunks):
+            out.append(self._CHUNK.pack(flag, chunk.nbytes, len(comp)))
+            # .data: hand the plane to the final join as a view, not a
+            # fresh bytes object (the join is the single output copy)
+            out.append(first.data if isinstance(first, np.ndarray)
+                       else first)
+            if flag:
+                out.append(comp)
+        return b"".join(out)
+
+    # ------------------------------------------------------------ decode
+
+    def decode(self, data) -> memoryview:
+        mv = data if isinstance(data, memoryview) else memoryview(data)
+        if mv.itemsize != 1 or mv.ndim != 1:
+            mv = mv.cast("B")
+        if bytes(mv[:4]) != self.MAGIC:
+            raise ValueError("not a byteplane payload")
+        _, total, nchunks = self._HEAD.unpack_from(mv, 4)
+        out = np.empty(total, dtype=np.uint8)
+        jobs = []
+        off = 4 + self._HEAD.size
+        start = 0
+        for _ in range(nchunks):
+            flag, clen, hi_len = self._CHUNK.unpack_from(mv, off)
+            off += self._CHUNK.size
+            first_len = clen if flag == 0 else clen - clen // 2
+            jobs.append((flag, start, clen,
+                         mv[off:off + first_len],
+                         mv[off + first_len:off + first_len + hi_len]))
+            off += first_len + hi_len
+            start += clen
+        if start != total:
+            raise ValueError("corrupt byteplane container")
+
+        def dec(job):
+            flag, start, clen, first, comp = job
+            dst = out[start:start + clen]
+            if flag == 0:
+                dst[:] = np.frombuffer(first, dtype=np.uint8)
+            else:
+                dst[0::2] = np.frombuffer(first, dtype=np.uint8)
+                dst[1::2] = np.frombuffer(zlib.decompress(comp),
+                                          dtype=np.uint8)
+            return None
+
+        self._map(dec, jobs)
+        # memoryview keeps `out` alive; zero-copy handoff to serde
+        return out.data
+
+
+# ------------------------------------------------------------ container
+
+
+def pack(payload, codec: Union[str, Codec, None] = None) -> bytes:
     """magic | u8 name length | codec name | encoded payload."""
     return pack_parts([payload], codec)
 
 
-def pack_parts(parts, codec: Union[str, Codec, None] = None) -> bytes:
-    """`pack`, but over a list of bytes-like payload parts: the raw
-    codec joins container header and parts in one pass (no intermediate
-    payload copy — the spool's hot store path)."""
+def encode_parts(parts, codec: Union[str, Codec, None] = None) -> List:
+    """The self-describing container as a part list: header parts plus
+    the encoded payload. The raw codec passes the payload parts through
+    untouched — with a vectored backend (`write_parts`) the store path
+    then performs ZERO host-side payload copies. Compressing codecs
+    join once (their scratch input) and contribute their output part."""
     c = get_codec(codec)
     name = c.name.encode("ascii")
-    head = [_MAGIC, struct.pack("B", len(name)), name]
+    head: List = [_MAGIC, struct.pack("B", len(name)), name]
     if isinstance(c, RawCodec):
-        return b"".join(head + list(parts))
-    return b"".join(head + [c.encode(b"".join(parts))])
+        return head + list(parts)
+    return head + [c.encode(b"".join(
+        p if isinstance(p, (bytes, bytearray, memoryview))
+        else memoryview(p) for p in parts))]
+
+
+def pack_parts(parts, codec: Union[str, Codec, None] = None) -> bytes:
+    """`pack`, but over a list of bytes-like payload parts, joined once
+    into a monolithic blob (the legacy non-vectored store path; the
+    vectored path hands `encode_parts` straight to `write_parts`)."""
+    return b"".join(bytes(p) if isinstance(p, memoryview) else p
+                    for p in encode_parts(parts, codec))
+
+
+def unpack_aliased(blob):
+    """Inverse of `pack` as ``(payload, aliases_blob)``: the bool tells
+    the caller whether `payload` borrows `blob`'s buffer (raw codec /
+    container-less legacy blobs) or owns fresh memory (every decoding
+    codec) — the spool uses it to release a pooled read buffer the
+    moment nothing references it."""
+    if bytes(blob[:len(_MAGIC)]) != _MAGIC:
+        return blob, True               # passthrough borrows
+    (nlen,) = struct.unpack_from("B", blob, len(_MAGIC))
+    off = len(_MAGIC) + 1
+    name = bytes(blob[off:off + nlen]).decode("ascii")
+    codec = get_codec(name)
+    payload = memoryview(blob)[off + nlen:]
+    if isinstance(codec, RawCodec):
+        return payload, True
+    return codec.decode(payload), False
 
 
 def unpack(blob):
     """Inverse of `pack`; blobs without the magic tag are passed through
     untouched (seed-format files stay readable). Raw-codec payloads come
     back as a zero-copy memoryview of `blob`."""
-    if bytes(blob[:len(_MAGIC)]) != _MAGIC:
-        return blob
-    (nlen,) = struct.unpack_from("B", blob, len(_MAGIC))
-    off = len(_MAGIC) + 1
-    name = bytes(blob[off:off + nlen]).decode("ascii")
-    codec = get_codec(name)
-    payload = memoryview(blob)[off + nlen:]
-    return payload if isinstance(codec, RawCodec) \
-        else codec.decode(payload)
+    return unpack_aliased(blob)[0]

@@ -11,6 +11,8 @@ Spec grammar (CLI surface, `--spool-backend`-style flags):
     striped:/base@4         stripe across 4 subdirs of /base
     tiered:64mb             RAM budget 64 MiB over fs default
     tiered:64mb,<spec>      RAM budget over any lower spec (recursive)
+    aio                     O_DIRECT data plane under the default dir
+    aio:/path@8             O_DIRECT at /path, submission depth 8
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ import os
 import tempfile
 from typing import List, Optional
 
+from repro.io.aio import AioBackend
 from repro.io.backend import StorageBackend, get_backend_cls
 from repro.io.backends import (FilesystemBackend, HostMemoryBackend,
                                StripedBackend, TieredBackend)
@@ -72,6 +75,15 @@ def backend_from_spec(spec: str, *,
         return _own_tmpdirs(
             FilesystemBackend(rest or _default_dir(base_dir, created)),
             created)
+    if kind == "aio":
+        depth = 4
+        if "@" in rest:
+            rest, _, d = rest.rpartition("@")
+            depth = int(d)
+        return _own_tmpdirs(
+            AioBackend(rest or _default_dir(base_dir, created),
+                       queue_depth=depth),
+            created)
     if kind == "mem":
         return HostMemoryBackend()
     if kind == "striped":
@@ -116,6 +128,14 @@ def build_backend(io_cfg, *,
         return HostMemoryBackend()
     if kind == "fs":
         return _own_tmpdirs(FilesystemBackend(directory()), created)
+    if kind == "aio":
+        return _own_tmpdirs(
+            AioBackend(directory(),
+                       alignment=getattr(io_cfg, "alignment", 4096),
+                       queue_depth=getattr(io_cfg, "queue_depth", 4),
+                       pool_bytes=getattr(io_cfg, "pool_bytes",
+                                          256 << 20)),
+            created)
     if kind == "striped":
         dirs = list(io_cfg.stripe_dirs) or _stripe_dirs(directory(), 2)
         return _own_tmpdirs(

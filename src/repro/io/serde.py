@@ -1,16 +1,18 @@
 """Array-list <-> bytes serialization for spooled residuals.
 
 Grown from the seed `core/spool.py` helpers (`_serialize`/`_deserialize`)
-with two changes:
+into the zero-copy data plane's serde layer:
 
-* single-copy format: ``RSA2 | u32 header_len | pickled metas | raw
-  buffers`` assembled with one ``b"".join`` over memoryviews — the seed's
-  tobytes-then-pickle path copied every payload twice. `serialize_parts`
-  exposes the part list so the codec container can join once more parts
-  instead of re-copying the payload.
-* deserialized arrays are materialized into one writable backing buffer
-  (`np.frombuffer` over a pickle blob returns read-only views), so
-  fetched residuals behave like the originals downstream.
+* part-list format: ``RSA2 | u32 header_len | pickled metas | raw
+  buffers`` — `serialize_parts` exposes the raw array buffers as
+  memoryviews, so a vectored backend (`write_parts`) moves them to the
+  device with no join and no payload copy at all.
+* `deserialize_leaves(..., copy=False)` parses a blob into zero-copy
+  read-only views over the caller's buffer (the spool's pooled-load
+  path: views stay valid while the pool lease is held, and consumers
+  copy on demand when they materialize device arrays). The default
+  `copy=True` materializes fresh writable per-leaf arrays — one payload
+  copy, but no whole-blob ``bytearray`` double-buffer like the old path.
 
 Legacy blobs (the seed's pickled ``(metas, blobs)`` tuples) still load.
 """
@@ -35,8 +37,13 @@ def _np_dtype(dt: str) -> np.dtype:
 def serialize_parts(leaves: Sequence[np.ndarray]) -> List[bytes]:
     """The blob as a list of bytes-like parts (no payload copy; array
     buffers are exposed as memoryviews). ``b"".join(parts)`` is the
-    canonical single-copy assembly."""
-    arrs = [np.ascontiguousarray(np.asarray(a)) for a in leaves]
+    canonical single-copy assembly; `StorageBackend.write_parts` is the
+    zero-copy one."""
+    arrs = []
+    for x in leaves:
+        x = np.asarray(x)
+        # reshape back: ascontiguousarray silently promotes 0-d to 1-d
+        arrs.append(np.ascontiguousarray(x).reshape(x.shape))
     metas = [(a.shape, str(a.dtype)) for a in arrs]
     header = pickle.dumps(metas, protocol=4)
     parts: List[bytes] = [_MAGIC, struct.pack("<I", len(header)), header]
@@ -48,23 +55,50 @@ def serialize_leaves(leaves: Sequence[np.ndarray]) -> bytes:
     return b"".join(serialize_parts(leaves))
 
 
-def deserialize_leaves(data) -> List[np.ndarray]:
-    """bytes / bytearray / memoryview -> list of *writable* arrays."""
-    if bytes(data[:4]) == _MAGIC:
-        buf = memoryview(bytearray(data))    # one writable copy
-        (hlen,) = struct.unpack_from("<I", buf, 4)
+def deserialize_leaves(data, *, copy: bool = True,
+                       pinned: bool = True) -> List[np.ndarray]:
+    """bytes / bytearray / memoryview -> list of arrays.
+
+    copy=True  (default): every array owns fresh writable memory.
+    copy=False: zero-copy views over `data`'s buffer. With pinned=True
+    (default) the views are forced read-only — required when the buffer
+    is a recyclable pool lease, so borrowers (and jax's zero-copy
+    asarray) can never alias memory the pool will reuse; consumers copy
+    on demand. Pass pinned=False when `data` owns fresh unshared memory
+    (e.g. a codec's decode output): the views keep the buffer alive by
+    reference and writable views skip the copy-on-demand."""
+    view = data if isinstance(data, memoryview) else memoryview(data)
+    if view.itemsize != 1 or view.ndim != 1:
+        view = view.cast("B")
+    if bytes(view[:4]) == _MAGIC:
+        (hlen,) = struct.unpack_from("<I", view, 4)
         off = 8
-        metas = pickle.loads(bytes(buf[off:off + hlen]))
+        metas = pickle.loads(bytes(view[off:off + hlen]))
         off += hlen
         out = []
         for shape, dt in metas:
             np_dt = _np_dtype(dt)
             n = np_dt.itemsize * math.prod(shape)
-            out.append(np.frombuffer(buf[off:off + n],
-                                     dtype=np_dt).reshape(shape))
+            seg = view[off:off + n]
+            if len(seg) < n:
+                raise ValueError(
+                    f"truncated residual blob: leaf {shape}/{dt} needs "
+                    f"{n} bytes, {len(seg)} left")
+            if n == 0:
+                # np.frombuffer rejects empty buffers of wide dtypes
+                arr = np.empty(shape, dtype=np_dt)
+            else:
+                arr = np.frombuffer(seg, dtype=np_dt).reshape(shape)
+                if copy:
+                    arr = arr.copy()        # fresh, writable, owns data
+                elif pinned:
+                    # frombuffer inherits writability from the buffer;
+                    # see docstring for why pinned views go read-only
+                    arr.flags.writeable = False
+            out.append(arr)
             off += n
         return out
-    # legacy seed format: pickled (metas, blobs)
+    # legacy seed format: pickled (metas, blobs) — always materialized
     metas, blobs = pickle.loads(data)
     out = []
     for (shape, dt), blob in zip(metas, blobs):

@@ -61,9 +61,10 @@ def main() -> None:
                     help="min elements to offload through the spool "
                          "(default: paper's 2**20)")
     ap.add_argument("--spool-backend", default="fs",
-                    choices=["fs", "striped", "mem", "tiered"],
+                    choices=["fs", "striped", "mem", "tiered", "aio"],
                     help="storage backend for the activation spool "
-                         "(repro.io); honored by BOTH engines")
+                         "(repro.io); honored by BOTH engines. 'aio' "
+                         "is the O_DIRECT zero-copy data plane")
     ap.add_argument("--spool-dir", default=None,
                     help="spool directory (default: fresh temp dir, "
                          "removed on close)")
@@ -71,10 +72,22 @@ def main() -> None:
                     help="comma-separated stripe directories for "
                          "--spool-backend striped/tiered (default: 2 "
                          "subdirs of the spool dir)")
-    ap.add_argument("--codec", default="raw", choices=["raw", "zlib"],
-                    help="payload codec for spooled payloads")
+    ap.add_argument("--codec", default="raw",
+                    choices=["raw", "zlib", "byteplane"],
+                    help="payload codec for spooled payloads; "
+                         "'byteplane' splits bf16/fp16 into byte planes "
+                         "and DEFLATEs only the compressible one")
     ap.add_argument("--host-mem-budget-mb", type=int, default=256,
                     help="tiered backend: host-RAM tier budget in MiB")
+    ap.add_argument("--spool-align", type=int, default=4096,
+                    help="data plane: buffer-pool / O_DIRECT alignment "
+                         "(power of two)")
+    ap.add_argument("--spool-queue-depth", type=int, default=4,
+                    help="aio backend: concurrent aligned segments "
+                         "submitted per blob")
+    ap.add_argument("--spool-pool-mb", type=int, default=256,
+                    help="idle cap of the shared aligned buffer pool "
+                         "in MiB")
     ap.add_argument("--host-offload", nargs="?", const="opt_state",
                     default="none",
                     choices=["none", "opt_state", "activations"],
@@ -92,7 +105,10 @@ def main() -> None:
         backend=args.spool_backend, directory=args.spool_dir,
         stripe_dirs=stripe_dirs, codec=args.codec,
         host_mem_budget_bytes=args.host_mem_budget_mb << 20,
-        host_offload=args.host_offload)
+        host_offload=args.host_offload,
+        alignment=args.spool_align,
+        queue_depth=args.spool_queue_depth,
+        pool_bytes=args.spool_pool_mb << 20)
 
     # the context manager guarantees teardown (worker-thread join, temp
     # spool/ckpt dir removal) on exceptions and Ctrl-C too
@@ -132,13 +148,21 @@ def main() -> None:
         dt = time.time() - t0
 
         if session.spool is not None:
-            bk = session.spool.backend
+            session.spool.wait_io()     # drain in-flight stores so the
+            bk = session.spool.backend  # busy clocks below are closed
             io_stats = bk.stats
             if io_stats.num_writes:
                 print(f"backend[{bk.kind}] wrote "
                       f"{io_stats.bytes_written/1e6:.1f} MB @ "
                       f"{io_stats.write_bandwidth/1e9:.2f} GB/s, read "
                       f"{io_stats.bytes_read/1e6:.1f} MB", flush=True)
+                dp = session.spool.data_plane_stats()
+                print(f"data plane: "
+                      f"{dp['backend']['copies_per_byte']:.2f} host "
+                      f"copies/byte, pool hit rate "
+                      f"{dp['pool']['hit_rate']:.0%} "
+                      f"({dp['pool']['bytes_allocated']/1e6:.1f} MB "
+                      f"ever allocated)", flush=True)
             if hasattr(bk, "per_device_write_bytes"):
                 per_dev = bk.per_device_write_bytes()
                 print("stripe write balance:",

@@ -222,6 +222,11 @@ class _SlowReadBackend(FilesystemBackend):
         time.sleep(self.delay)
         return super().read(key)
 
+    def readinto(self, key, buf):
+        # the pooled data plane loads through readinto, not read
+        time.sleep(self.delay)
+        return super().readinto(key, buf)
+
 
 def _staged_wait(delay, monkeypatch, *, simulate_bug):
     from repro.models.api import build_model

@@ -1,7 +1,9 @@
 """Tests for the repro.io storage-backend subsystem: spool round-trip /
-forwarding / cancellation over every backend, stripe balance + per-device
-endurance projection, tiered eviction under the RAM budget, codec
-round-trips, and the tiered adaptive-planner bandwidth model."""
+forwarding / cancellation over every backend, the vectored zero-copy
+data plane (write_parts / readinto / size, aligned buffer pool, aio
+direct I/O), stripe balance + per-device endurance projection, tiered
+eviction under the RAM budget, codec round-trips incl. byteplane, serde
+edge cases, and the tiered adaptive-planner bandwidth model."""
 import os
 
 import jax.numpy as jnp
@@ -12,12 +14,15 @@ from repro.core.adaptive import (ModuleProfile, TierBandwidth,
                                  effective_write_bandwidth, plan_offload)
 from repro.core.endurance import project_device_lifespans
 from repro.core.spool import ActivationSpool
-from repro.io import (CODECS, FilesystemBackend, HostMemoryBackend,
+from repro.io import (CODECS, AioBackend, AlignedBufferPool,
+                      FilesystemBackend, HostMemoryBackend,
                       StripedBackend, TieredBackend, backend_from_spec,
-                      build_backend, deserialize_leaves, pack, parse_bytes,
-                      serialize_leaves, unpack)
+                      build_backend, deserialize_leaves, encode_parts,
+                      pack, parse_bytes, serialize_leaves,
+                      serialize_parts, unpack)
 
-BACKEND_KINDS = ["fs", "striped", "mem", "tiered"]
+BACKEND_KINDS = ["fs", "striped", "mem", "tiered", "aio"]
+CODEC_NAMES = ["raw", "zlib", "byteplane"]
 
 
 def make_backend(kind: str, tmp_path, **kw):
@@ -32,6 +37,9 @@ def make_backend(kind: str, tmp_path, **kw):
         return TieredBackend(FilesystemBackend(str(tmp_path / "lower")),
                              capacity_bytes=kw.get("capacity_bytes",
                                                    32 << 10))
+    if kind == "aio":
+        return AioBackend(str(tmp_path / "aio"),
+                          queue_depth=kw.get("queue_depth", 4))
     raise AssertionError(kind)
 
 
@@ -75,7 +83,7 @@ def test_backend_reports_tier_bandwidths(kind, tmp_path):
 
 
 @pytest.mark.parametrize("kind", BACKEND_KINDS)
-@pytest.mark.parametrize("codec", ["raw", "zlib"])
+@pytest.mark.parametrize("codec", CODEC_NAMES)
 def test_spool_roundtrip_over_backend(kind, codec, tmp_path):
     spool = ActivationSpool(make_backend(kind, tmp_path), codec=codec,
                             min_offload_elements=16)
@@ -282,6 +290,181 @@ def test_spool_key_reuse_after_orphaned_store(tmp_path):
     spool.close()
 
 
+# --------------------------------------- vectored data-plane contract
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_write_parts_matches_joined_write(kind, tmp_path):
+    """The vectored path must store byte-identical blobs to the joined
+    path, and `size` must report the true stored length."""
+    b = make_backend(kind, tmp_path)
+    parts = [b"head", os.urandom(10_000), b"", os.urandom(3)]
+    joined = b"".join(parts)
+    b.write_parts("vec", [memoryview(p) for p in parts])
+    b.write("join", joined)
+    assert b.read("vec") == joined == b.read("join")
+    assert b.size("vec") == len(joined)
+    assert b.stats.bytes_written == 2 * len(joined)
+    b.close()
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+def test_readinto_fills_caller_buffer(kind, tmp_path):
+    b = make_backend(kind, tmp_path)
+    data = os.urandom(20_000)
+    b.write_parts("k", [memoryview(data)])
+    pool = AlignedBufferPool()
+    with pool.acquire(len(data)) as lease:
+        mv = b.readinto("k", lease.mv)
+        assert len(mv) == len(data)
+        assert bytes(mv) == data
+    # too-small buffer must be rejected, not silently truncated
+    with pytest.raises((ValueError, FileNotFoundError)):
+        b.readinto("k", memoryview(bytearray(100)))
+    with pytest.raises((FileNotFoundError, OSError)):
+        b.readinto("missing", memoryview(bytearray(1 << 15)))
+    pool.close()
+    b.close()
+
+
+@pytest.mark.parametrize("kind", ["fs", "striped", "tiered"])
+def test_vectored_fs_paths_copy_nothing(kind, tmp_path):
+    """The zero-copy claim, as a number: fs-family vectored writes and
+    pooled reads must not perform a single host-side payload copy."""
+    b = make_backend(kind, tmp_path, capacity_bytes=0)  # tiered: all low
+    parts = serialize_parts([np.arange(4096, dtype=np.float32)])
+    b.write_parts("k", parts)
+    pool = AlignedBufferPool()
+    with pool.acquire(b.size("k")) as lease:
+        b.readinto("k", lease.mv)
+    assert b.stats.bytes_copied == 0
+    if kind == "tiered":
+        assert b.lower.stats.bytes_copied == 0
+    pool.close()
+    b.close()
+
+
+def test_bufpool_alignment_and_reuse():
+    pool = AlignedBufferPool(alignment=4096, max_bytes=1 << 20)
+    a = pool.acquire(10_000)
+    assert a.capacity % 4096 == 0 and a.capacity >= 10_000
+    assert np.frombuffer(a.mv, np.uint8).ctypes.data % 4096 == 0
+    a.mv[:5] = b"hello"
+    a.release()
+    a.release()                       # idempotent
+    b = pool.acquire(9_000)           # same size class -> reuse
+    assert pool.hits == 1 and pool.misses == 1
+    b.release()
+    assert pool.free_bytes == b.capacity
+    pool.close()
+    assert pool.free_bytes == 0
+
+
+def test_bufpool_trims_beyond_cap():
+    pool = AlignedBufferPool(alignment=4096, max_bytes=8192)
+    leases = [pool.acquire(8192) for _ in range(3)]
+    for lease in leases:
+        lease.release()
+    assert pool.trimmed == 2          # only one 8 KiB buffer cached
+    assert pool.free_bytes <= 8192
+    pool.close()
+
+
+def test_bufpool_rejects_bad_alignment():
+    with pytest.raises(ValueError):
+        AlignedBufferPool(alignment=3000)
+    with pytest.raises(ValueError):
+        AlignedBufferPool(alignment=1 << 20)   # beyond page guarantee
+
+
+def test_aio_backend_roundtrip_unaligned_sizes(tmp_path):
+    """O_DIRECT padding/ftruncate must be invisible: arbitrary
+    (unaligned) blob lengths round-trip exactly."""
+    b = AioBackend(str(tmp_path / "aio"))
+    for n in (0, 1, 511, 4096, 4097, 10_000, 70_001):
+        data = os.urandom(n)
+        b.write("k", data)
+        assert b.size("k") == n
+        assert b.read("k") == data
+    b.close()
+
+
+def test_aio_depth_one_no_executor(tmp_path):
+    b = AioBackend(str(tmp_path / "aio"), queue_depth=1)
+    data = os.urandom(30_000)
+    b.write("k", data)
+    assert b.read("k") == data
+    b.close()
+
+
+def test_aio_buffered_fallback_roundtrip(tmp_path):
+    """direct=False exercises the buffered + fdatasync + fadvise path
+    (what a filesystem without O_DIRECT gets)."""
+    b = AioBackend(str(tmp_path / "aio"), direct=False)
+    data = os.urandom(10_000)
+    b.write_parts("k", [memoryview(data[:4000]), memoryview(data[4000:])])
+    pool = AlignedBufferPool()
+    with pool.acquire(len(data)) as lease:
+        assert bytes(b.readinto("k", lease.mv)) == data
+    pool.close()
+    b.close()
+
+
+def test_aio_readinto_unaligned_buffer_bounces(tmp_path):
+    """A misaligned caller buffer must still be filled correctly (via
+    the pooled aligned bounce)."""
+    b = AioBackend(str(tmp_path / "aio"))
+    data = os.urandom(9_000)
+    b.write("k", data)
+    raw = bytearray(len(data) + 1)
+    mv = memoryview(raw)[1:]          # deliberately odd base address
+    assert bytes(b.readinto("k", mv)) == data
+    b.close()
+
+
+def test_aio_rewrite_shrinking_blob_truncates(tmp_path):
+    """In-place overwrite must not leave the previous lease's tail."""
+    b = AioBackend(str(tmp_path / "aio"))
+    b.write("k", os.urandom(50_000))
+    small = os.urandom(5_000)
+    b.write("k", small)
+    assert b.size("k") == len(small)
+    assert b.read("k") == small
+    b.close()
+
+
+def test_fs_write_is_atomic_no_temp_left(tmp_path):
+    """The atomic-write contract: blobs appear only complete, temp
+    files never survive, and a torn write (simulated) is rejected by
+    serde instead of misparsed."""
+    b = FilesystemBackend(str(tmp_path / "fs"))
+    blob = serialize_leaves([np.arange(1024, dtype=np.float32)])
+    b.write("k", blob)
+    files = os.listdir(str(tmp_path / "fs"))
+    assert files == ["k.act"]         # no .tmp leftovers
+    # a crash mid-store under the OLD path left a truncated blob; the
+    # serde guard must reject it loudly on "restart"
+    with open(str(tmp_path / "fs" / "torn.act"), "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(ValueError):
+        deserialize_leaves(unpack(b.read("torn")))
+
+
+def test_fs_write_failure_cleans_temp(tmp_path, monkeypatch):
+    """If the vectored write dies mid-flight, the temp file must not
+    accumulate (and the real blob must stay absent)."""
+    b = FilesystemBackend(str(tmp_path / "fs"))
+    import repro.io.backends as mod
+
+    def boom(fd, parts, offset=0):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr(mod, "pwritev_all", boom)
+    with pytest.raises(OSError):
+        b.write("k", b"x" * 1000)
+    assert os.listdir(str(tmp_path / "fs")) == []
+
+
 # -------------------------------------------------------------- codecs
 
 
@@ -289,12 +472,111 @@ def test_spool_key_reuse_after_orphaned_store(tmp_path):
 def test_codec_pack_roundtrip(codec):
     payload = b"residual" * 4096
     blob = pack(payload, codec)
-    assert unpack(blob) == payload
+    assert bytes(unpack(blob)) == payload
 
 
 def test_zlib_compresses_compressible_payloads():
     payload = np.zeros(1 << 16, np.float32).tobytes()
     assert len(pack(payload, "zlib")) < len(pack(payload, "raw"))
+
+
+def test_byteplane_beats_zlib_on_bf16_residuals():
+    """The codec's reason to exist: on realistic bf16 activations the
+    high (sign+exponent) plane compresses while the mantissa plane is
+    noise — byteplane must out-compress whole-stream zlib level 1."""
+    import ml_dtypes
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(1 << 18).astype(np.float32)
+    a[a < 0] *= 0.01
+    payload = a.astype(ml_dtypes.bfloat16).tobytes()
+    bp = len(pack(payload, "byteplane"))
+    zl = len(pack(payload, "zlib"))
+    raw = len(pack(payload, "raw"))
+    assert bp < zl < raw
+    assert bytes(unpack(pack(payload, "byteplane"))) == payload
+
+
+def test_byteplane_chunked_and_incompressible():
+    """Multi-chunk payloads round-trip (parallel encode path) and pure
+    noise falls back to the per-chunk raw escape without growth beyond
+    the per-chunk header."""
+    from repro.io.codecs import BytePlaneCodec
+    c = BytePlaneCodec(chunk_bytes=1 << 12)
+    noise = os.urandom(5 * (1 << 12) + 123)     # 6 chunks, odd tail
+    enc = c.encode(noise)
+    assert bytes(c.decode(enc)) == noise
+    assert len(enc) <= len(noise) + 16 + 6 * 16
+    assert bytes(c.decode(c.encode(b""))) == b""
+
+
+# ----------------------------------------------------- serde edge cases
+
+
+def _edge_trees():
+    import ml_dtypes
+    rng = np.random.default_rng(7)
+    return {
+        "empty": [np.zeros((0,), np.float32), np.zeros((3, 0, 2),
+                                                       np.int32)],
+        "zero_d": [np.float32(3.25).reshape(()),
+                   np.array(7, dtype=np.int64)],
+        "ml_dtypes": [
+            rng.standard_normal(257).astype(ml_dtypes.bfloat16),
+            rng.standard_normal(64).astype(ml_dtypes.float8_e4m3fn),
+            rng.standard_normal(33).astype(ml_dtypes.float8_e5m2),
+        ],
+        "mixed": [np.arange(100, dtype=np.uint8),
+                  np.float32(1.5).reshape(()),
+                  rng.standard_normal((17, 3)).astype(np.float16),
+                  np.zeros((0, 5), ml_dtypes.bfloat16),
+                  rng.integers(-9, 9, (4, 4, 4)).astype(np.int16)],
+    }
+
+
+@pytest.mark.parametrize("case", sorted(_edge_trees()))
+@pytest.mark.parametrize("copy", [True, False])
+def test_serde_edge_cases_roundtrip(case, copy):
+    leaves = _edge_trees()[case]
+    out = deserialize_leaves(serialize_leaves(leaves), copy=copy)
+    assert len(out) == len(leaves)
+    for a, got in zip(leaves, out):
+        assert np.asarray(a).shape == got.shape
+        assert np.asarray(a).dtype == got.dtype
+        np.testing.assert_array_equal(np.asarray(a), got)
+
+
+@pytest.mark.parametrize("kind", BACKEND_KINDS)
+@pytest.mark.parametrize("codec", CODEC_NAMES)
+def test_serde_edge_cases_through_backend(kind, codec, tmp_path):
+    """Property-style: every edge tree survives the FULL data plane
+    (serialize_parts -> encode_parts -> write_parts -> readinto ->
+    unpack -> zero-copy deserialize) on every backend x codec pair."""
+    b = make_backend(kind, tmp_path)
+    trees = _edge_trees()
+    pool = AlignedBufferPool()
+    for name, leaves in trees.items():
+        b.write_parts(name, encode_parts(serialize_parts(leaves), codec))
+    for name, leaves in trees.items():
+        n = b.size(name)
+        assert n is not None and n > 0
+        with pool.acquire(n) as lease:
+            out = deserialize_leaves(unpack(b.readinto(name, lease.mv)),
+                                     copy=False)
+            assert len(out) == len(leaves)
+            for a, got in zip(leaves, out):
+                assert np.asarray(a).dtype == got.dtype
+                assert np.asarray(a).shape == got.shape
+                np.testing.assert_array_equal(np.asarray(a), got)
+    pool.close()
+    b.close()
+
+
+def test_deserialize_views_are_readonly_and_copy_writable():
+    blob = serialize_leaves([np.arange(64, dtype=np.float32)])
+    views = deserialize_leaves(blob, copy=False)
+    assert not views[0].flags.writeable     # borrowers cannot scribble
+    copies = deserialize_leaves(blob, copy=True)
+    assert copies[0].flags.writeable
 
 
 def test_unpack_accepts_seed_format_blobs():
@@ -333,8 +615,23 @@ def test_backend_from_spec(tmp_path):
     assert isinstance(t, TieredBackend)
     assert t.capacity_bytes == 64 << 10
     assert isinstance(t.lower, HostMemoryBackend)
+    a = backend_from_spec("aio@8", base_dir=base)
+    assert isinstance(a, AioBackend) and a.queue_depth == 8
+    a2 = backend_from_spec(f"aio:{base}/dio", base_dir=base)
+    assert isinstance(a2, AioBackend) and a2.directory == f"{base}/dio"
     with pytest.raises(KeyError):
         backend_from_spec("nvram", base_dir=base)
+
+
+def test_build_backend_aio_from_config(tmp_path):
+    from repro.configs.base import SpoolIoConfig
+    ioc = SpoolIoConfig(backend="aio", queue_depth=2,
+                        alignment=512, pool_bytes=1 << 20).validate()
+    b = build_backend(ioc, default_dir=str(tmp_path))
+    assert isinstance(b, AioBackend)
+    assert b.queue_depth == 2 and b.alignment == 512
+    assert b.pool.alignment == 512
+    b.close()
 
 
 def test_build_backend_from_config(tmp_path):

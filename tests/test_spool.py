@@ -272,3 +272,103 @@ def test_bandwidth_limit_enforced():
     dt = time.perf_counter() - t0
     assert dt >= 0.4, dt            # >= nbytes / bw
     spool.close()
+
+
+# ------------------------------------------- data-plane stat regressions
+
+
+def test_write_bandwidth_zero_before_first_store():
+    """Regression: SpoolStats.write_bandwidth returned inf before any
+    store completed, and dryrun/roofline reports printed infinite
+    bandwidth."""
+    spool, _ = _spool()
+    assert spool.stats.write_bandwidth == 0.0
+    spool.offload("k", _tree())
+    spool.wait_io()
+    assert 0.0 < spool.stats.write_bandwidth < float("inf")
+    spool.close()
+
+
+class _FailingWriteBackend:
+    """Minimal backend whose writes always fail (ENOSPC-style)."""
+
+    def __init__(self):
+        from repro.io import HostMemoryBackend
+        self._inner = HostMemoryBackend()
+        self.stats = self._inner.stats
+        self.kind = "failing"
+
+    def write_parts(self, key, parts):
+        raise OSError(28, "No space left on device")
+
+    write = write_parts
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_failed_store_forwarding_counted_once():
+    """Regression: the failed-store forwarding branch ignored the
+    fwd_counted flag, so a peek-then-fetch of a failed store inflated
+    bytes_forwarded."""
+    spool = ActivationSpool(_FailingWriteBackend(),
+                            min_offload_elements=16)
+    tree = _tree()
+    nbytes = sum(np.asarray(x).nbytes for x in tree)
+    spool.offload("k", tree)
+    spool.wait_io()                      # store fails, arrays retained
+    out1 = spool.fetch("k", cancel_pending=False)     # peek
+    out2 = spool.fetch("k")                           # fetch
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert spool.stats.bytes_forwarded == nbytes, \
+        "peek-then-fetch of a failed store must count ONE forwarding"
+    spool.drop("k")
+    spool.close()
+
+
+def test_pooled_load_lease_reused_across_steps():
+    """Steady state of the pooled load path: the same aligned buffer
+    serves successive loads (hit rate climbs), and dropped records
+    release their leases back to the pool."""
+    spool, _ = _spool()
+    for step in range(4):
+        spool.offload(f"s{step}", _tree(seed=step))
+        spool.wait_io()
+        out = spool.fetch(f"s{step}")
+        assert len(out) == 3
+        spool.drop(f"s{step}")
+    stats = spool.pool.stats()
+    assert stats["hits"] >= 2, stats     # buffers really got reused
+    assert spool.pool.free_bytes > 0     # leases returned after drop
+    spool.close()
+
+
+def test_data_plane_stats_shape():
+    spool, _ = _spool()
+    spool.offload("k", _tree())
+    spool.wait_io()
+    spool.fetch("k")
+    spool.drop("k")
+    dp = spool.data_plane_stats()
+    assert set(dp) == {"backend", "pool"}
+    assert dp["backend"]["copies_per_byte"] == 0.0   # vectored fs path
+    assert 0.0 <= dp["pool"]["hit_rate"] <= 1.0
+    spool.close()
+
+
+def test_decoding_codec_releases_lease_before_drop():
+    """zlib/byteplane decodes own fresh memory, so the pooled read
+    buffer must go back to the pool at load time, not sit pinned on the
+    record until drop()."""
+    spool, _ = _spool(codec="zlib")
+    spool.offload("k", _tree())
+    spool.wait_io()
+    spool.prefetch("k")
+    spool.wait_io()                       # load done, record not dropped
+    assert spool.pool.free_bytes > 0, \
+        "lease should be recycled as soon as the decode detaches"
+    out = spool.fetch("k")
+    assert len(out) == 3
+    spool.drop("k")
+    spool.close()
