@@ -173,7 +173,16 @@ class SpoolIoConfig:
     this field), "opt_state" (optimizer moments live on the selected
     backend *between* steps, 10Cache-style), or "activations"
     (per-layer residuals stream through the backend *inside* the jitted
-    step via the repro.core.hooks io_callback path)."""
+    step via the repro.core.hooks io_callback path). On a multi-device
+    mesh the "activations" mode is SPMD-sharded: every device's host
+    callback hands the spool only its local residual shard under
+    shard-qualified lease keys (``jit{step}/s{shard}``).
+
+    dedupe_replicas: mesh-aware offload only — when part of the mesh
+    merely replicates a segment's residuals (e.g. tensor-parallel ranks
+    of a batch-sharded tensor), store ONE copy per replica group and
+    count backward fetches down by the replica count (True, default)
+    instead of writing one copy per device (False)."""
     backend: str = "fs"
     directory: Optional[str] = None        # None -> fresh temp dir
     stripe_dirs: Tuple[str, ...] = ()
@@ -184,6 +193,7 @@ class SpoolIoConfig:
     load_threads: int = 4
     bandwidth_limit: Optional[float] = None
     host_offload: str = "none"      # none | opt_state | activations (jit)
+    dedupe_replicas: bool = True    # mesh: store replicated shards once
     # --- data-plane knobs (buffer pool / direct I/O) ---
     alignment: int = 4096           # pool + O_DIRECT alignment
     queue_depth: int = 4            # aio: concurrent segments per blob
@@ -196,6 +206,7 @@ class SpoolIoConfig:
         assert self.host_mem_budget_bytes >= 0
         assert self.host_offload in ("none", "opt_state", "activations"), \
             self.host_offload
+        assert isinstance(self.dedupe_replicas, bool), self.dedupe_replicas
         import mmap
         assert self.alignment > 0 and \
             (self.alignment & (self.alignment - 1)) == 0, \

@@ -21,6 +21,27 @@ the trace. This module is that bridge:
     in the right transaction. A backward fetch prefetches the previous
     stage first (§3.3.2, one module ahead).
 
+SPMD (multi-device meshes): an io_callback cannot be partitioned by
+GSPMD, so on a mesh the hooks wrap the callbacks in a `shard_map` over
+the whole mesh — every device invokes its own host callback with only
+its LOCAL residual shard (`ShardPlan` picks per-leaf PartitionSpecs:
+leading dim over the dp axes, the innermost divisible dim over tp).
+Leases become shard-qualified (``jit{step}/s{shard}`` next to the
+existing ``_s{stage}`` keys). Mesh axes that shard no leaf of a segment
+only replicate data; those replica devices do not store a second copy —
+the primary replica records the stage with ``consumers=n_replicas`` and
+the bridge counts backward fetches down by that expected shard count
+(`HookBridge(dedupe_replicas=False)` restores one store per device).
+Callbacks then arrive on N XLA host-callback threads per step instead
+of one; the bridge's fetch additionally *waits* for its forward store
+callback (bounded by `fetch_timeout`), so no assumption about XLA's
+cross-device schedule is baked in. The callbacks go through
+`repro.core.hostcb.raw_io_callback` — `io_callback` minus its arg
+`device_put`, whose async copy of a large operand can starve against
+the mesh's collectives and deadlock the step (see hostcb) — so a host
+callback never re-enters the jax runtime: the bridge copies operands
+with plain owned memcpys and fetches with `to_device=False`.
+
 Ordering note: the forward callback returns a tiny token that is
 threaded through the custom_vjp residuals into the backward callback's
 operands. The pairing is therefore enforced by DATA dependence, not by
@@ -31,72 +52,248 @@ reordering a fetch before its store was enqueued.
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Dict, List, Optional
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import io_callback
+from jax.sharding import PartitionSpec as P
 
+from repro.core.hostcb import raw_io_callback as io_callback
 from repro.core.spool import ActivationSpool, SpoolStepTransaction
+from repro.parallel.shmap import (axes_size, canonical_axis_entry,
+                                  linear_axis_index, local_shape,
+                                  mesh_size, shard_map, spec_axes)
 
 #: stage-index offset for encoder-stream layers, so one step lease can
 #: hold both streams without key collisions (decoder layers are 0-based)
 ENC_STAGE_BASE = 1 << 20
+
+#: how long a backward fetch waits for its matching forward offload
+#: callback before giving up — on a mesh the callbacks arrive on
+#: independent XLA host-callback threads, and a replica's backward can
+#: in principle be scheduled before the primary's forward callback ran
+DEFAULT_FETCH_TIMEOUT_S = 120.0
+
+
+# ====================================================================
+# Shard planning (how residual leaves map onto mesh devices)
+# ====================================================================
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """How one hooked segment's residual leaves split across a mesh.
+
+    `specs[i]` is leaf i's PartitionSpec; `writer_axes` are the mesh
+    axes that shard at least one leaf (devices differing only along the
+    remaining `replica_axes` hold byte-identical residuals). The shard
+    id in spool keys is the linearized index over `writer_axes`; the
+    replica id over `replica_axes` selects which duplicate stores."""
+
+    mesh: Any
+    specs: Tuple[Any, ...]
+    writer_axes: Tuple[str, ...]
+    replica_axes: Tuple[str, ...]
+
+    @property
+    def n_shards(self) -> int:
+        return axes_size(self.mesh, self.writer_axes)
+
+    @property
+    def n_replicas(self) -> int:
+        return axes_size(self.mesh, self.replica_axes)
+
+    def local_sds(self, global_sds) -> Tuple[jax.ShapeDtypeStruct, ...]:
+        return tuple(
+            jax.ShapeDtypeStruct(local_shape(s.shape, spec, self.mesh),
+                                 s.dtype)
+            for s, spec in zip(global_sds, self.specs))
+
+
+def plan_shards(mesh, dp_axes, tp_axis, leaf_sds) -> ShardPlan:
+    """Pick a PartitionSpec per residual leaf: leading dim over the dp
+    axes (batch-major residuals dominate), the innermost other divisible
+    dim over tp. Indivisible leaves replicate — their bytes are stored
+    once per *writer* group, not once per device."""
+    dp_axes = tuple(a for a in (dp_axes or ())
+                    if a in mesh.shape and mesh.shape[a] > 1)
+    if tp_axis is not None and (tp_axis not in mesh.shape
+                                or mesh.shape[tp_axis] <= 1):
+        tp_axis = None
+    dp_size = axes_size(mesh, dp_axes)
+    specs = []
+    for s in leaf_sds:
+        parts: List[Any] = [None] * len(s.shape)
+        if dp_axes and s.shape and s.shape[0] > 0 \
+                and s.shape[0] % dp_size == 0:
+            parts[0] = canonical_axis_entry(dp_axes)
+        if tp_axis is not None:
+            tp = mesh.shape[tp_axis]
+            for d in range(len(s.shape) - 1, -1, -1):
+                if parts[d] is None and s.shape[d] > 0 \
+                        and s.shape[d] % tp == 0:
+                    parts[d] = tp_axis
+                    break
+        specs.append(P(*parts))
+    used = set()
+    for spec in specs:
+        used.update(spec_axes(spec))
+    writer = tuple(a for a in mesh.axis_names if a in used)
+    replica = tuple(a for a in mesh.axis_names if a not in used)
+    return ShardPlan(mesh=mesh, specs=tuple(specs),
+                     writer_axes=writer, replica_axes=replica)
 
 
 class HookBridge:
     """Host-side endpoint of the jit engine's activation-offload hooks.
 
     One bridge per training session. Callbacks arrive on XLA's
-    host-callback threads with (step, stage) scalars; the bridge opens
-    one transactional spool lease per step (key ``jit{step}``, mirroring
-    the staged engine's ``mb{mb}``) and closes it when the backward pass
-    has consumed every recorded stage.
+    host-callback threads with (step, stage[, shard]) scalars; the
+    bridge opens one transactional spool lease per step and shard
+    (key ``jit{step}`` on one device, ``jit{step}/s{shard}`` per mesh
+    shard — mirroring the staged engine's ``mb{mb}``) and closes each
+    lease when the backward pass has consumed every stage it recorded.
+
+    Shard accounting: when residuals are replicated across part of the
+    mesh and `dedupe_replicas` is on, only the primary replica stores a
+    stage — recorded with ``consumers=n_replicas`` — and every
+    replica's backward fetch counts the stage down; the LAST fetch
+    drops it. `stats_by_shard()` exposes per-shard offload/fetch/byte
+    counters whose totals sum exactly to the bridge-wide traffic.
     """
 
-    def __init__(self, spool: ActivationSpool, *, key_prefix: str = "jit"):
+    def __init__(self, spool: ActivationSpool, *, key_prefix: str = "jit",
+                 dedupe_replicas: bool = True,
+                 fetch_timeout: float = DEFAULT_FETCH_TIMEOUT_S):
         self.spool = spool
+        self.dedupe_replicas = dedupe_replicas
+        self.fetch_timeout = fetch_timeout
         self._prefix = key_prefix
         self._lock = threading.RLock()
-        self._txs: Dict[int, SpoolStepTransaction] = {}
+        self._cv = threading.Condition(self._lock)
+        self._txs: Dict[str, SpoolStepTransaction] = {}
+        self._shard_stats: Dict[Any, Dict[str, int]] = {}
 
     @property
     def stats(self):
         return self.spool.stats
 
-    def _tx(self, step: int) -> SpoolStepTransaction:
+    def stats_by_shard(self) -> Dict[Any, Dict[str, int]]:
+        """Per-shard callback traffic: offloads / fetches /
+        replica_skips counts and logical bytes in each direction. The
+        key is the shard id (None on a single device)."""
         with self._lock:
-            tx = self._txs.get(step)
+            return {k: dict(v) for k, v in self._shard_stats.items()}
+
+    def _note(self, shard, field: str, n: int = 1) -> None:
+        with self._lock:
+            rec = self._shard_stats.setdefault(shard, {
+                "offloads": 0, "fetches": 0, "replica_skips": 0,
+                "bytes_in": 0, "bytes_out": 0})
+            rec[field] += n
+
+    def _step_id(self, step: int, shard) -> str:
+        base = f"{self._prefix}{step}"
+        return base if shard is None else f"{base}/s{shard}"
+
+    def _tx(self, step_id: str) -> SpoolStepTransaction:
+        with self._lock:
+            tx = self._txs.get(step_id)
             if tx is None:
-                tx = self.spool.step(f"{self._prefix}{step}")
-                self._txs[step] = tx
+                tx = self.spool.step(step_id)
+                self._txs[step_id] = tx
             return tx
 
     # ---------------------------------------------------- callback API
 
-    def offload(self, step: int, stage: int, arrays: List[Any]) -> None:
-        """Forward hook: async-store one segment's residual leaves."""
-        self._tx(step).offload(stage, list(arrays))
+    def offload(self, step: int, stage: int, arrays: List[Any], *,
+                shard=None, consumers: int = 1) -> None:
+        """Forward hook: async-store one segment's residual leaves
+        under the (step, shard) lease. `consumers` is how many backward
+        fetches this stage expects (one per replica shard).
 
-    def fetch(self, step: int, stage: int) -> List[np.ndarray]:
+        The leaves are COPIED here: raw_io_callback hands the hooks
+        numpy views of XLA's operand buffers that die when the callback
+        returns, and the spool's store worker runs after that. A plain
+        owned memcpy also never touches the jax runtime — a device
+        thread must not block on jax's async machinery mid-step."""
+        arrays = [np.array(a, copy=True) for a in arrays]
+        tx = self._tx(self._step_id(step, shard))
+        tx.offload(stage, arrays, consumers=consumers)
+        self._note(shard, "offloads")
+        self._note(shard, "bytes_in", int(sum(a.nbytes for a in arrays)))
+        with self._cv:
+            self._cv.notify_all()
+
+    def sharded_offload(self, step: int, stage: int, arrays: List[Any],
+                        *, shard: int, replica: int,
+                        n_replicas: int) -> None:
+        """Mesh entry point: with replica dedupe the primary replica
+        stores once for its whole replica group; without it every
+        device stores its own copy under a replica-qualified shard."""
+        if self.dedupe_replicas and n_replicas > 1:
+            if replica == 0:
+                self.offload(step, stage, arrays, shard=shard,
+                             consumers=n_replicas)
+            else:
+                self._note(shard, "replica_skips")
+        else:
+            self.offload(step, stage, arrays,
+                         shard=shard * n_replicas + replica)
+
+    def fetch(self, step: int, stage: int, *,
+              shard=None) -> List[np.ndarray]:
         """Backward hook: blocking fetch of one segment's residuals,
-        prefetching the previous stage first (one module ahead). Closes
-        the step's lease when its last live stage is consumed."""
-        with self._lock:
-            tx = self._txs.get(step)
-        if tx is None:
-            raise KeyError(f"no live spool lease for jit step {step}")
+        prefetching the previous stage first (one module ahead). Counts
+        the stage's consumers down; the last fetch drops it, and the
+        (step, shard) lease closes when its last live stage is
+        consumed. Waits (bounded) for the forward offload callback —
+        on a mesh the store and fetch arrive on different host-callback
+        threads and their cross-device order is not guaranteed."""
+        step_id = self._step_id(step, shard)
+        # only a sharded fetch may legitimately beat its store callback
+        # (they run on different device threads); on one device the
+        # token data-dependence already ordered them, so a missing
+        # lease there is a bug — fail fast instead of timing out
+        wait = self.fetch_timeout if shard is not None else 0.0
+        deadline = time.monotonic() + wait
+        with self._cv:
+            while True:
+                tx = self._txs.get(step_id)
+                if tx is not None and tx.has_stage(stage):
+                    break
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    raise KeyError(
+                        f"no live spool record for step {step_id!r} "
+                        f"stage {stage} after {wait:.0f}s "
+                        f"— was the forward offload callback dropped?")
+                self._cv.wait(timeout=min(left, 1.0))
         tx.prefetch(stage - 1)
-        out = tx.fetch(stage)
+        # to_device=False: the callback returns host arrays straight to
+        # XLA — converting through jnp would device_put on the callback
+        # thread, the exact jax-runtime dependence raw_io_callback
+        # exists to avoid
+        out = tx.consume(stage, to_device=False)
         arrays = [np.asarray(a) for a in out]
-        tx.drop(stage)
+        self._note(shard, "fetches")
+        self._note(shard, "bytes_out",
+                   int(sum(a.nbytes for a in arrays)))
         with self._lock:
-            if not tx.live_stages and self._txs.get(step) is tx:
-                del self._txs[step]
+            if not tx.live_stages and self._txs.get(step_id) is tx:
+                del self._txs[step_id]
                 tx.close()
         return arrays
+
+    def sharded_fetch(self, step: int, stage: int, *, shard: int,
+                      replica: int, n_replicas: int) -> List[np.ndarray]:
+        if self.dedupe_replicas and n_replicas > 1:
+            return self.fetch(step, stage, shard=shard)
+        return self.fetch(step, stage,
+                          shard=shard * n_replicas + replica)
 
     def close(self) -> None:
         """Drop any leftover leases (a step aborted mid-backward)."""
@@ -106,7 +303,8 @@ class HookBridge:
             tx.close()
 
 
-def spooled_scan_body(fn: Callable, bridge: HookBridge) -> Callable:
+def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
+                      mesh=None, dp_axes=(), tp_axis=None) -> Callable:
     """Wrap ``fn(p_layer, x) -> out`` (a segment's per-layer body) so its
     residuals stream through the bridge's spool.
 
@@ -115,10 +313,16 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge) -> Callable:
     cotangents are ordinary zeros; values are exact integers). The
     undifferentiated primal path calls `fn` directly — serving and eval
     never touch the spool.
+
+    With a multi-device `mesh`, the callbacks run under a shard_map so
+    each device hands the bridge only its local residual shard (see the
+    module docstring); `dp_axes`/`tp_axis` seed the per-leaf sharding
+    choice exactly like `RunSettings`.
     """
     # populated at trace time by fwd, read by bwd (same trace); the
     # pattern and the param-leaf identity test match core.staged._Stage
     cell: Dict[str, Any] = {}
+    sharded = mesh is not None and mesh_size(mesh) > 1
 
     @jax.custom_vjp
     def wrapped(p, x, step, stage):
@@ -142,13 +346,57 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge) -> Callable:
         if not resid_idx:            # segment saved only parameter leaves
             return out, (kept, step, stage, jnp.zeros((), jnp.int32))
 
-        def offload_cb(step_, stage_, *arrays):
-            bridge.offload(int(step_), int(stage_), list(arrays))
-            return np.int32(0)
+        resid = tuple(leaves[i] for i in resid_idx)
+        if not sharded:
+            def offload_cb(step_, stage_, *arrays):
+                bridge.offload(int(step_), int(stage_), list(arrays))
+                return np.int32(0)
 
-        token = io_callback(offload_cb, jax.ShapeDtypeStruct((), jnp.int32),
-                            step, stage,
-                            *(leaves[i] for i in resid_idx))
+            token = io_callback(offload_cb,
+                                jax.ShapeDtypeStruct((), jnp.int32),
+                                step, stage, *resid)
+            return out, (kept, step, stage, token)
+
+        plan = plan_shards(mesh, dp_axes, tp_axis, cell["resid_shapes"])
+        cell["plan"] = plan
+        n_replicas = plan.n_replicas
+
+        def offload_cb(step_, stage_, shard_, replica_, *arrays):
+            bridge.sharded_offload(int(step_), int(stage_), list(arrays),
+                                   shard=int(shard_),
+                                   replica=int(replica_),
+                                   n_replicas=n_replicas)
+            return np.zeros((1,), np.int32)
+
+        dedupe = bridge.dedupe_replicas and n_replicas > 1
+
+        def offload_body(step_, stage_, *local_leaves):
+            shard_ = linear_axis_index(mesh, plan.writer_axes)
+            replica_ = linear_axis_index(mesh, plan.replica_axes)
+            tok = io_callback(offload_cb,
+                              jax.ShapeDtypeStruct((1,), jnp.int32),
+                              step_, stage_, shard_, replica_,
+                              *local_leaves)
+            if dedupe:
+                # With replica dedupe only the primary replica's
+                # callback stores; a replica's backward fetch then
+                # BLOCKS (host side) on the primary's store having run.
+                # XLA's scheduler cannot see that cross-device callback
+                # dependence and may legally park the primary at a
+                # later collective first — a deadlock. The psum makes
+                # the dependence explicit: every device's token now
+                # data-depends on every replica's (so in particular the
+                # primary's) store callback having executed.
+                tok = jax.lax.psum(tok, plan.replica_axes)
+            return tok
+
+        # one (1,)-token per device, reassembled over the whole mesh so
+        # the backward shard_map can hand each device its own token back
+        token_spec = P(canonical_axis_entry(mesh.axis_names))
+        token = shard_map(offload_body, mesh=mesh,
+                          in_specs=(P(), P(), *plan.specs),
+                          out_specs=token_spec,
+                          check_vma=False)(step, stage, *resid)
         return out, (kept, step, stage, token)
 
     def bwd(res, g):
@@ -157,11 +405,33 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge) -> Callable:
         for i, l in zip(cell["param_idx"], kept):
             leaves[i] = l
         if cell["resid_idx"]:
-            def fetch_cb(step_, stage_, _token):
-                return tuple(bridge.fetch(int(step_), int(stage_)))
+            if not sharded:
+                def fetch_cb(step_, stage_, _token):
+                    return tuple(bridge.fetch(int(step_), int(stage_)))
 
-            fetched = io_callback(fetch_cb, cell["resid_shapes"],
-                                  step, stage, token)
+                fetched = io_callback(fetch_cb, cell["resid_shapes"],
+                                      step, stage, token)
+            else:
+                plan = cell["plan"]
+                local_sds = plan.local_sds(cell["resid_shapes"])
+                n_replicas = plan.n_replicas
+
+                def fetch_cb(step_, stage_, shard_, replica_, _token):
+                    return tuple(bridge.sharded_fetch(
+                        int(step_), int(stage_), shard=int(shard_),
+                        replica=int(replica_), n_replicas=n_replicas))
+
+                def fetch_body(step_, stage_, token_):
+                    shard_ = linear_axis_index(mesh, plan.writer_axes)
+                    replica_ = linear_axis_index(mesh, plan.replica_axes)
+                    return io_callback(fetch_cb, local_sds, step_, stage_,
+                                       shard_, replica_, token_)
+
+                token_spec = P(canonical_axis_entry(mesh.axis_names))
+                fetched = shard_map(fetch_body, mesh=mesh,
+                                    in_specs=(P(), P(), token_spec),
+                                    out_specs=plan.specs,
+                                    check_vma=False)(step, stage, token)
             for i, l in zip(cell["resid_idx"], fetched):
                 leaves[i] = l
         vjp = jax.tree.unflatten(cell["treedef"], leaves)

@@ -1,0 +1,113 @@
+"""Raw host callback primitive for the spool hooks (`repro.core.hostcb`).
+
+`jax.experimental.io_callback`'s runtime impl wraps every operand in a
+`jax.device_put(..., cpu_device0)` before invoking the python function.
+On a multi-device CPU mesh that is a liveness hazard: the device_put of
+a large operand takes jaxlib's *async* copy path, whose completion task
+runs on the client's shared worker pool — the same pool the mesh's
+collectives and intra-op work saturate. A callback that then forces the
+array (`np.asarray`) parks its DEVICE thread on the pending event while
+the other devices park at a collective waiting for this device: a
+cross-device deadlock that reproduces reliably with 8 forced host
+devices on a small container (and is timing-dependent everywhere else).
+
+`raw_io_callback` is a ~60-line primitive that reuses jax's own
+callback machinery — the same `_IOEffect` (so jit/scan treat it exactly
+like `io_callback`: not DCE'd, allowed in control flow, droppable only
+when result-free, which our token threading already prevents) and the
+same MANUAL op-sharding under shard_map (one callback per device) — but
+lowers through `mlir.emit_python_callback` directly, so the python
+function receives the raw numpy VIEWS of the XLA operand buffers, no
+jax arrays, no device_put, no events. Nothing in the callback can touch
+the jax runtime, so nothing in the callback can deadlock it.
+
+Contract (stricter than io_callback — the device_put was also a copy):
+
+  * operand views are only valid DURING the call — the callback must
+    copy anything it keeps (`np.array(x, copy=True)` is a plain memcpy);
+  * results must be numpy arrays matching the declared ShapeDtypeStructs;
+  * no vmap / differentiation through the primitive (the hooks never do
+    either — it lives inside a custom_vjp's fwd/bwd).
+
+Falls back to `jax.experimental.io_callback` when the jax internals it
+borrows move (import errors are caught), trading the liveness fix for
+compatibility; `RAW_CALLBACK_AVAILABLE` says which one callers got.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+RAW_CALLBACK_AVAILABLE = False
+
+try:
+    import inspect
+
+    from jax._src import core as _jcore
+    from jax._src.callback import _callback_op_sharding as _op_sharding
+    from jax._src.callback import _IOEffect
+    from jax._src.interpreters import mlir as _mlir
+
+    # Guard against call-signature drift, not just import-time moves:
+    # both borrowed internals have changed shape across jax 0.4.x, and
+    # a mismatch would otherwise crash at lowering time instead of
+    # falling back. (A full smoke lower would need a jax backend, which
+    # module import must not initialize.)
+    _ep = list(inspect.signature(_mlir.emit_python_callback).parameters)
+    if _ep[:6] != ["ctx", "callback", "token", "operands",
+                   "operand_avals", "result_avals"] \
+            or "has_side_effect" not in _ep or "sharding" not in _ep:
+        raise ImportError("emit_python_callback signature drifted")
+    if len(inspect.signature(_op_sharding).parameters) != 2:
+        raise ImportError("_callback_op_sharding signature drifted")
+
+    raw_callback_p = _jcore.Primitive("repro_raw_host_callback")
+    raw_callback_p.multiple_results = True
+
+    @raw_callback_p.def_effectful_abstract_eval
+    def _raw_callback_abstract_eval(*avals, callback, result_avals):
+        del avals, callback
+        return result_avals, {_IOEffect}
+
+    def _raw_callback_lowering(ctx, *args, callback, result_avals):
+        del result_avals
+
+        def _wrapped(*flat_args):
+            out = callback(*flat_args)
+            return (tuple(out) if isinstance(out, (tuple, list))
+                    else (out,))
+
+        op_sharding = _op_sharding(ctx.module_context.axis_context, None)
+        result, _, _ = _mlir.emit_python_callback(
+            ctx, _wrapped, None, list(args), ctx.avals_in, ctx.avals_out,
+            has_side_effect=True, sharding=op_sharding)
+        return result
+
+    _mlir.register_lowering(raw_callback_p, _raw_callback_lowering)
+    RAW_CALLBACK_AVAILABLE = True
+except Exception:  # pragma: no cover - future jax moved the internals
+    pass
+
+
+def raw_io_callback(callback: Callable[..., Any], result_shape_dtypes,
+                    *args) -> Any:
+    """`io_callback` minus the arg device_put (see module docstring).
+
+    `result_shape_dtypes` is a flat sequence (or single) of
+    ShapeDtypeStructs; returns a flat tuple (or single array). The
+    callback receives numpy views valid only during the call.
+    """
+    single = hasattr(result_shape_dtypes, "shape")
+    sds: Tuple = ((result_shape_dtypes,) if single
+                  else tuple(result_shape_dtypes))
+    if not RAW_CALLBACK_AVAILABLE:  # pragma: no cover - fallback path
+        from jax.experimental import io_callback
+        return io_callback(callback, result_shape_dtypes, *args)
+    result_avals = tuple(
+        _jcore.ShapedArray(tuple(s.shape), s.dtype) for s in sds)
+    out = raw_callback_p.bind(*args, callback=callback,
+                              result_avals=result_avals)
+    return out[0] if single else tuple(out)

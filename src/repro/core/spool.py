@@ -130,10 +130,20 @@ class SpoolStats:
         return self.bytes_offloaded / self.store_time \
             if self.store_time else 0.0
 
+    def add(self, other: "SpoolStats") -> "SpoolStats":
+        """Field-wise sum — aggregate stats across spools (e.g. one
+        spool per shard group, or per-step snapshots)."""
+        import dataclasses as _dc
+        return SpoolStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in _dc.fields(SpoolStats)})
+
+    __add__ = add
+
 
 class _Job:
     __slots__ = ("key", "arrays", "state", "cond", "kind", "orphaned",
-                 "error")
+                 "error", "reg_keys")
 
     def __init__(self, key, arrays, kind):
         self.key = key
@@ -143,6 +153,12 @@ class _Job:
         self.kind = kind  # "store" | "load"
         self.orphaned = False  # dropped while the store was running
         self.error = None      # exception raised by the worker, if any
+        # dedup-registry keys for the spooled leaves; released by
+        # whoever drops the last reference to self.arrays (the store
+        # worker on success, drop() otherwise) — releasing later than
+        # the buffer free would let a recycled allocation false-dedup
+        # against a dead entry
+        self.reg_keys: tuple = ()
 
 
 class SpoolStepTransaction:
@@ -165,12 +181,22 @@ class SpoolStepTransaction:
             tx.drop(si)
     """
 
-    __slots__ = ("_spool", "step_id", "_live", "_closed", "_tlock")
+    __slots__ = ("_spool", "step_id", "_live", "_closed", "_tlock",
+                 "_consumers", "_stage_locks")
 
     def __init__(self, spool: "ActivationSpool", step_id: str):
         self._spool = spool
         self.step_id = step_id
         self._live: Dict[Any, str] = {}     # stage -> spool key
+        # stage -> remaining consume() calls before the stage is dropped
+        # (shard-aware leases: a record replicated across N mesh shards
+        # is stored once and consumed N times, one fetch per shard)
+        self._consumers: Dict[Any, int] = {}
+        # stage -> lock serializing concurrent consumers of ONE stage,
+        # so a non-final peek never races the final fetch's drop (the
+        # drop releases the pooled load buffer the peek's zero-copy
+        # views still borrow)
+        self._stage_locks: Dict[Any, threading.Lock] = {}
         self._closed = False
         # the jit engine's hooks drive one transaction from XLA
         # host-callback threads; stage bookkeeping must be re-entrant
@@ -179,7 +205,9 @@ class SpoolStepTransaction:
     def key(self, stage) -> str:
         return f"{self.step_id}_s{stage}"
 
-    def _record(self, stage) -> str:
+    def _record(self, stage, consumers: int = 1) -> str:
+        if consumers < 1:
+            raise ValueError(f"consumers must be >= 1, got {consumers}")
         with self._tlock:
             if self._closed:
                 raise RuntimeError(
@@ -189,16 +217,25 @@ class SpoolStepTransaction:
                 raise KeyError(f"stage {stage!r} already live in step "
                                f"{self.step_id!r}")
             self._live[stage] = key
+            self._consumers[stage] = consumers
+            self._stage_locks[stage] = threading.Lock()
         return key
 
-    def offload(self, stage, tree) -> None:
-        """Async-store a stage's residual pytree under this lease."""
-        self._spool.offload(self._record(stage), tree)
+    def offload(self, stage, tree, *, consumers: int = 1) -> None:
+        """Async-store a stage's residual pytree under this lease.
+        `consumers` is how many `consume()` calls the stage expects
+        before it is dropped (one per mesh shard holding a replica)."""
+        self._spool.offload(self._record(stage, consumers), tree)
 
-    def keep(self, stage, tree) -> None:
+    def keep(self, stage, tree, *, consumers: int = 1) -> None:
         """Record a stage's residuals as kept-in-memory under this
         lease (same drop/accounting lifecycle as offloaded ones)."""
-        self._spool.keep(self._record(stage), tree)
+        self._spool.keep(self._record(stage, consumers), tree)
+
+    def has_stage(self, stage) -> bool:
+        """True while the stage is recorded and not fully consumed."""
+        with self._tlock:
+            return stage in self._live
 
     def prefetch(self, stage) -> None:
         """Hint an async load; a stage this lease never recorded is
@@ -208,17 +245,20 @@ class SpoolStepTransaction:
         if key is not None:
             self._spool.prefetch(key)
 
-    def fetch(self, stage):
+    def fetch(self, stage, *, to_device: bool = True):
         """Blocking: the stage's full residual pytree (forwarded from
-        the in-flight store or reloaded from the backend)."""
+        the in-flight store or reloaded from the backend).
+        to_device=False keeps reloaded leaves as host numpy arrays —
+        for callers (the jit engine's host callbacks) that must not
+        enter the jax runtime on their thread."""
         with self._tlock:
             key = self._live.get(stage)
         if key is None:
             raise KeyError(f"stage {stage!r} not recorded in step "
                            f"{self.step_id!r}")
-        return self._spool.fetch(key)
+        return self._spool.fetch(key, to_device=to_device)
 
-    def peek(self, stage):
+    def peek(self, stage, *, to_device: bool = True):
         """Non-consuming fetch: materialize the pytree WITHOUT
         cancelling a still-queued store, so a later fetch/drop still
         finds the blob on the backend (checkpoint materialization)."""
@@ -227,12 +267,41 @@ class SpoolStepTransaction:
         if key is None:
             raise KeyError(f"stage {stage!r} not recorded in step "
                            f"{self.step_id!r}")
-        return self._spool.fetch(key, cancel_pending=False)
+        return self._spool.fetch(key, cancel_pending=False,
+                                 to_device=to_device)
+
+    def consume(self, stage, *, to_device: bool = True):
+        """Fetch the stage's pytree and count one consumer down; the
+        LAST consumer's call also drops the record (memory + blob).
+        Concurrent consumers of one stage serialize on a per-stage
+        lock, so a non-final materialization never races the final
+        drop's pool-lease release."""
+        with self._tlock:
+            if stage not in self._live:
+                raise KeyError(f"stage {stage!r} not recorded in step "
+                               f"{self.step_id!r}")
+            slock = self._stage_locks[stage]
+        with slock:
+            with self._tlock:
+                remaining = self._consumers.get(stage, 0)
+                if remaining <= 0:        # dropped by a racing consumer
+                    raise KeyError(f"stage {stage!r} already consumed "
+                                   f"in step {self.step_id!r}")
+                self._consumers[stage] = remaining - 1
+                last = remaining == 1
+            if last:
+                out = self.fetch(stage, to_device=to_device)
+                self.drop(stage)
+            else:
+                out = self.peek(stage, to_device=to_device)
+        return out
 
     def drop(self, stage) -> None:
         """Consume the stage: free memory and delete the blob."""
         with self._tlock:
             key = self._live.pop(stage, None)
+            self._consumers.pop(stage, None)
+            self._stage_locks.pop(stage, None)
         if key is not None:
             self._spool.drop(key)
 
@@ -342,7 +411,7 @@ class ActivationSpool:
         parameter/duplicate storages stay in memory (recorded, not
         written)."""
         leaves, treedef = jax.tree.flatten(tree)
-        keep_idx, spool_idx, acquired = [], [], []
+        keep_idx, spool_idx, acquired, spooled_keys = [], [], [], []
         kept_act_bytes = alias_bytes = 0
         for i, leaf in enumerate(leaves):
             if self.registry.is_parameter(leaf):
@@ -353,11 +422,19 @@ class ActivationSpool:
                 kept_act_bytes += leaf.size * leaf.dtype.itemsize
                 continue
             tid, dup = self.registry.acquire(leaf)
-            acquired.append(_buffer_key(leaf))
             if dup:
+                # alias of a still-live tracked buffer: keep the
+                # reference, never write it twice; its key is released
+                # when the record drops
+                acquired.append(_buffer_key(leaf))
                 keep_idx.append(i)
                 alias_bytes += leaf.size * leaf.dtype.itemsize
             else:
+                # spooled leaves' keys ride the store job instead: the
+                # worker frees the array the moment the write lands,
+                # and the registry entry must die WITH the buffer or a
+                # recycled allocation would false-dedup against it
+                spooled_keys.append(_buffer_key(leaf))
                 spool_idx.append(i)
         self.stats.bytes_deduped += alias_bytes
 
@@ -378,6 +455,7 @@ class ActivationSpool:
             return
         self.tracker.alloc((key, "s"), nbytes, tag=f"residual:{key}")
         job = _Job(key, spooled, "store")
+        job.reg_keys = tuple(spooled_keys)
         with self._lock:
             self._records[key] = {
                 "treedef": treedef, "keep": {i: leaves[i] for i in keep_idx},
@@ -424,14 +502,20 @@ class ActivationSpool:
             rec["load_job"] = lj
         self._load_q.put(lj)
 
-    def fetch(self, key, *, cancel_pending: bool = True):
+    def fetch(self, key, *, cancel_pending: bool = True,
+              to_device: bool = True):
         """Blocking: return the full pytree for backward.
 
         cancel_pending=False is the non-consuming ("peek") variant: a
         still-queued store is forwarded but NOT cancelled, so the write
         still lands and a later consuming fetch finds the blob —
         required when the caller materializes a record it will fetch
-        again (e.g. checkpointing a spooled optimizer state)."""
+        again (e.g. checkpointing a spooled optimizer state).
+
+        to_device=False leaves reloaded arrays as host numpy (still
+        detached from pooled buffers) instead of jnp arrays — XLA
+        host-callback threads must hand bytes straight back to XLA
+        without re-entering the jax runtime."""
         with self._lock:
             rec = self._records.get(key)
             if rec is None:
@@ -502,7 +586,8 @@ class ActivationSpool:
                         # aligned host array instead of copying, so
                         # detach here, exactly once, at materialization
                         leaf = leaf.copy()
-                    leaf = jax.numpy.asarray(leaf)
+                    if to_device:
+                        leaf = jax.numpy.asarray(leaf)
                 leaves[i] = leaf
         return jax.tree.unflatten(rec["treedef"], leaves)
 
@@ -515,6 +600,15 @@ class ActivationSpool:
             return
         for bkey in rec["acquired"]:
             self.registry.release_key(bkey)
+        job = rec["job"]
+        if job is not None:
+            # spooled-leaf keys the store worker did not release (the
+            # store was cancelled, failed, or is still holding arrays
+            # for forwarding) die with the record
+            with job.cond:
+                keys, job.reg_keys = job.reg_keys, ()
+            for bkey in keys:
+                self.registry.release_key(bkey)
         self.tracker.free((key, "s"), tag=f"consumed:{key}")
         self.tracker.free((key, "k"), tag=f"consumed:{key}")
         lease = rec.get("load_lease")
@@ -690,6 +784,14 @@ class ActivationSpool:
                 sum(a.nbytes for a in arrays)
             self.stats.store_time += dt
             self.stats.num_stores += 1
+            # registry entries must not outlive the buffers they track:
+            # release BEFORE freeing, so a recycled address can never
+            # hit a stale entry (and a still-live alias keeps its own
+            # refcount on the entry)
+            with job.cond:
+                keys, job.reg_keys = job.reg_keys, ()
+            for bkey in keys:
+                self.registry.release_key(bkey)
             with job.cond:
                 job.arrays = None          # drop the reference -> memory free
                 job.state = DONE

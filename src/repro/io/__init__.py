@@ -30,6 +30,7 @@ from repro.io.codecs import (CODECS, BytePlaneCodec, Codec, RawCodec,
                              pack_parts, register_codec, unpack,
                              unpack_aliased)
 from repro.io.factory import backend_from_spec, build_backend, parse_bytes
+from repro.io.faults import FaultInjectingBackend
 from repro.io.serde import (deserialize_leaves, serialize_leaves,
                             serialize_parts)
 
@@ -37,8 +38,8 @@ __all__ = [
     "BACKENDS", "NOMINAL_WRITE_BW", "IoStats", "StorageBackend",
     "get_backend_cls", "register_backend", "as_memoryviews",
     "preadv_all", "pwritev_all",
-    "AioBackend", "FilesystemBackend", "HostMemoryBackend",
-    "StripedBackend", "TieredBackend",
+    "AioBackend", "FaultInjectingBackend", "FilesystemBackend",
+    "HostMemoryBackend", "StripedBackend", "TieredBackend",
     "AlignedBufferPool", "PooledBuffer",
     "CODECS", "BytePlaneCodec", "Codec", "RawCodec", "ZlibCodec",
     "encode_parts", "get_codec", "pack", "pack_parts", "register_codec",

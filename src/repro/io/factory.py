@@ -13,6 +13,8 @@ Spec grammar (CLI surface, `--spool-backend`-style flags):
     tiered:64mb,<spec>      RAM budget over any lower spec (recursive)
     aio                     O_DIRECT data plane under the default dir
     aio:/path@8             O_DIRECT at /path, submission depth 8
+    fault:<spec>            fault-injection wrapper over any lower spec
+    fault@2:mem             ... failing the first 2 writes (tests)
 """
 from __future__ import annotations
 
@@ -24,6 +26,7 @@ from repro.io.aio import AioBackend
 from repro.io.backend import StorageBackend, get_backend_cls
 from repro.io.backends import (FilesystemBackend, HostMemoryBackend,
                                StripedBackend, TieredBackend)
+from repro.io.faults import FaultInjectingBackend
 
 _SUFFIX = {"kb": 1 << 10, "mb": 1 << 20, "gb": 1 << 30, "tb": 1 << 40,
            "k": 1 << 10, "m": 1 << 20, "g": 1 << 30, "t": 1 << 40,
@@ -66,9 +69,12 @@ def backend_from_spec(spec: str, *,
                       base_dir: Optional[str] = None) -> StorageBackend:
     spec = (spec or "fs").strip()
     kind, _, rest = spec.partition(":")
-    if "@" in kind:                       # striped@N shorthand
+    if "@" in kind:                       # striped@N / fault@N shorthand
         kind, _, n = kind.partition("@")
-        rest = f"@{n}"
+        if kind == "fault":               # fault@N:<inner> keeps <inner>
+            rest = f"@{n}:{rest}" if rest else f"@{n}"
+        else:
+            rest = f"@{n}"
     get_backend_cls(kind)                 # fail fast on unknown kinds
     created: List[str] = []
     if kind == "fs":
@@ -107,6 +113,16 @@ def backend_from_spec(spec: str, *,
         created += list(getattr(lower, "owned_tmpdirs", ()))
         return _own_tmpdirs(
             TieredBackend(lower, capacity_bytes=parse_bytes(budget)),
+            created)
+    if kind == "fault":
+        fail_writes = 0
+        if rest.startswith("@"):          # fault@N:<inner>
+            n, _, rest = rest[1:].partition(":")
+            fail_writes = int(n)
+        inner = backend_from_spec(rest or "mem", base_dir=base_dir)
+        created += list(getattr(inner, "owned_tmpdirs", ()))
+        return _own_tmpdirs(
+            FaultInjectingBackend(inner, fail_writes=fail_writes),
             created)
     raise ValueError(f"unhandled backend spec {spec!r}")
 

@@ -1,0 +1,172 @@
+"""Fault-injecting storage backend (`repro.io.faults`).
+
+Wraps any `StorageBackend` and injects the failure modes a resilient
+spool must survive but a healthy CI box never produces on its own:
+
+  * write failures       — the next `fail_writes` eligible writes raise
+                           (`OSError` by default, e.g. ENOSPC), leaving
+                           the blob unwritten so the spool's
+                           failed-store forwarding / error surfacing
+                           paths run;
+  * short reads          — the next `short_reads` read/readinto calls
+                           return `short_by` bytes fewer than the blob
+                           holds, driving serde's truncation guards and
+                           the load-worker's pool-lease cleanup;
+  * delayed completion   — every write (read) sleeps `write_delay`
+                           (`read_delay`) seconds first, widening the
+                           in-flight windows that tensor forwarding,
+                           store cancellation and orphaned-write
+                           deletion race against.
+
+Failures can be scoped to keys containing `fail_key_substr`, and armed
+at runtime through `arm_write_failures` / `arm_short_reads`; `injected`
+counts what actually fired. The wrapper is registered as backend kind
+"fault" and constructible from a spec string — ``fault:<inner-spec>``
+or ``fault@N:<inner-spec>`` (fail the first N writes), e.g.
+``fault@2:mem`` — so the whole spool stack can be pointed at a faulty
+device from config, exactly like any other `repro.io` backend.
+
+The wrapper's own `IoStats` observe the *caller-visible* outcome
+(failed writes are not counted as written bytes); the inner backend
+keeps its own stats for the traffic that really reached it.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.io.backend import StorageBackend, register_backend
+
+
+@register_backend("fault")
+class FaultInjectingBackend(StorageBackend):
+    """See module docstring. All delegation reaches the inner backend
+    through its PUBLIC methods, so composite inners (striped / tiered /
+    aio) keep their own vectored paths and accounting."""
+
+    def __init__(self, inner: StorageBackend, *,
+                 fail_writes: int = 0,
+                 write_exc: Optional[BaseException] = None,
+                 fail_key_substr: Optional[str] = None,
+                 short_reads: int = 0,
+                 short_by: int = 1,
+                 write_delay: float = 0.0,
+                 read_delay: float = 0.0):
+        super().__init__()
+        self.inner = inner
+        self.write_delay = write_delay
+        self.read_delay = read_delay
+        self._flock = threading.Lock()
+        self._fail_writes = int(fail_writes)
+        self._write_exc = write_exc
+        self._fail_key_substr = fail_key_substr
+        self._short_reads = int(short_reads)
+        self._short_by = int(short_by)
+        self.injected: Dict[str, int] = {"write_failures": 0,
+                                         "short_reads": 0}
+        # mirror the inner's data-plane affordances so the spool makes
+        # the same plumbing choices it would against the bare backend
+        self.zero_copy_read = inner.zero_copy_read
+        self.owned_tmpdirs = tuple(getattr(inner, "owned_tmpdirs", ()))
+
+    @property
+    def pool(self):
+        return getattr(self.inner, "pool", None)
+
+    @property
+    def directory(self):
+        return getattr(self.inner, "directory", None)
+
+    # ----------------------------------------------------- arming knobs
+
+    def arm_write_failures(self, n: int, *,
+                           exc: Optional[BaseException] = None,
+                           key_substr: Optional[str] = None) -> None:
+        """The next `n` eligible writes raise."""
+        with self._flock:
+            self._fail_writes = int(n)
+            if exc is not None:
+                self._write_exc = exc
+            self._fail_key_substr = key_substr
+
+    def arm_short_reads(self, n: int, *, short_by: int = 1) -> None:
+        """The next `n` reads come back `short_by` bytes truncated."""
+        with self._flock:
+            self._short_reads = int(n)
+            self._short_by = int(short_by)
+
+    # ------------------------------------------------------- injection
+
+    def _maybe_fail_write(self, key: str) -> None:
+        with self._flock:
+            if self._fail_writes <= 0:
+                return
+            if self._fail_key_substr is not None \
+                    and self._fail_key_substr not in key:
+                return
+            self._fail_writes -= 1
+            self.injected["write_failures"] += 1
+            exc = self._write_exc
+        if exc is None:
+            raise OSError(f"injected write failure for {key!r}")
+        # fresh instance per injection: concurrent store workers must
+        # not share one exception object (each raise rewrites its
+        # __traceback__, corrupting the sibling's surfaced error)
+        try:
+            fresh = type(exc)(*exc.args)
+        except TypeError:            # exotic ctor: fall back to sharing
+            fresh = exc
+        raise fresh
+
+    def _shortfall(self) -> int:
+        with self._flock:
+            if self._short_reads <= 0:
+                return 0
+            self._short_reads -= 1
+            self.injected["short_reads"] += 1
+            return self._short_by
+
+    # ------------------------------------------------------ delegation
+
+    def _write(self, key: str, data: bytes) -> None:
+        if self.write_delay:
+            time.sleep(self.write_delay)
+        self._maybe_fail_write(key)
+        self.inner.write(key, data)
+
+    def _write_parts(self, key: str, parts: List[memoryview]) -> None:
+        if self.write_delay:
+            time.sleep(self.write_delay)
+        self._maybe_fail_write(key)
+        self.inner.write_parts(key, parts)
+
+    def _read(self, key: str) -> bytes:
+        if self.read_delay:
+            time.sleep(self.read_delay)
+        data = self.inner.read(key)
+        cut = self._shortfall()
+        return data[:max(0, len(data) - cut)] if cut else data
+
+    def _readinto(self, key: str, buf: memoryview) -> int:
+        if self.read_delay:
+            time.sleep(self.read_delay)
+        n = len(self.inner.readinto(key, buf))
+        cut = self._shortfall()
+        return max(0, n - cut) if cut else n
+
+    def _size(self, key: str) -> Optional[int]:
+        return self.inner.size(key)
+
+    def _delete(self, key: str) -> None:
+        self.inner.delete(key)
+
+    def flush(self) -> None:
+        self.inner.flush()
+
+    def tier_bandwidths(self):
+        return self.inner.tier_bandwidths()
+
+    def close(self) -> None:
+        self.inner.close()
+        super().close()

@@ -11,6 +11,8 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
@@ -77,16 +79,23 @@ def build_settings(cfg: ModelConfig, mesh, axes: MeshAxes, *, kind: str,
 
 
 def make_host_train_step(api: ModelApi, optimizer: Optimizer,
-                         settings: RunSettings) -> Callable:
-    """Whole-step jitted train step for the single-host jit engine (no
-    mesh plumbing) — shared by `repro.session.TrainSession` and
-    `repro.launch.train`. Signature matches what TrainLoop drives:
+                         settings: RunSettings, *, mesh=None,
+                         axes: Optional[MeshAxes] = None) -> Callable:
+    """Whole-step jitted train step for the single-host jit engine —
+    shared by `repro.session.TrainSession` and `repro.launch.train`.
+    Signature matches what TrainLoop drives:
     (params, opt_state, batch) -> (params, opt_state, metrics).
 
     With the "spool" activation policy (per-layer offloading via
     repro.core.hooks), the optimizer's step counter is threaded into the
     batch under the reserved "_spool_step" key — the traced scalar the
-    hooks key their spool step-leases on."""
+    hooks key their spool step-leases on.
+
+    With a `mesh`, each numpy batch from the loader is placed with
+    dp-sharded batch specs before entering the jitted step, so the
+    program partitions across the mesh (params/opt state placement is
+    the caller's job — `TrainSession.init` device_puts them); the spool
+    hooks then run their callbacks per shard under a shard_map."""
     hooked = (settings.activation_policy == "spool"
               and settings.hook_bridge is not None)
 
@@ -100,7 +109,18 @@ def make_host_train_step(api: ModelApi, optimizer: Optimizer,
         params, opt_state = optimizer.update(grads, opt_state, params)
         return params, opt_state, metrics
 
-    return step_fn
+    if mesh is None:
+        return step_fn
+    axes = axes or MeshAxes()
+
+    def sharded_step(params, opt_state, batch):
+        arrs = {k: np.asarray(v) for k, v in batch.items()}
+        specs = batch_specs(arrs, mesh, axes)
+        batch = jax.device_put(
+            arrs, {k: NamedSharding(mesh, specs[k]) for k in arrs})
+        return step_fn(params, opt_state, batch)
+
+    return sharded_step
 
 
 @dataclass
@@ -157,8 +177,10 @@ def make_train_step(api: ModelApi, mesh, axes: MeshAxes,
     def train_step(params, opt_state, batch):
         if settings.activation_policy == "spool" \
                 and settings.hook_bridge is not None:
-            # per-layer spool hooks (single-device meshes only — an
-            # io_callback cannot be partitioned across an SPMD program)
+            # per-layer spool hooks; on a multi-device mesh the hooks
+            # wrap their io_callbacks in a shard_map (GSPMD cannot
+            # partition a bare io_callback), so every device streams
+            # its local residual shard — see repro.core.hooks
             batch = dict(batch)
             batch["_spool_step"] = opt_state.step
         (_, metrics), grads = jax.value_and_grad(

@@ -96,8 +96,44 @@ def main() -> None:
                          "state between steps (bare --host-offload "
                          "keeps meaning this); 'activations' streams "
                          "per-layer residuals from inside the jitted "
-                         "step (repro.core.hooks)")
+                         "step (repro.core.hooks); works on a --mesh "
+                         "too (per-shard callbacks)")
+    ap.add_argument("--mesh", default=None,
+                    help="jit engine: device mesh shape, e.g. '2x4' "
+                         "(data x model) or '8' (data only). Needs "
+                         "that many jax devices (forced host devices "
+                         "work: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8). host-offload modes shard "
+                         "their spool traffic per device")
+    ap.add_argument("--spool-no-dedupe", action="store_true",
+                    help="mesh activation offload: store one residual "
+                         "copy PER DEVICE instead of one per replica "
+                         "group (debugging / bandwidth experiments)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        if args.engine != "jit":
+            ap.error("--mesh is a jit-engine flag")
+        import jax
+        from repro.launch.mesh import make_test_mesh
+        try:
+            shape = tuple(int(d) for d in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"bad --mesh {args.mesh!r}; expected e.g. 2x4")
+        if any(d < 1 for d in shape) or len(shape) > 3:
+            ap.error(f"bad --mesh {args.mesh!r}; expected e.g. 2x4")
+        ndev = 1
+        for d in shape:
+            ndev *= d
+        if ndev > jax.device_count():
+            ap.error(f"--mesh {args.mesh} needs {ndev} devices, have "
+                     f"{jax.device_count()} (hint: XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={ndev})")
+        names = {1: ("data",), 2: ("data", "model"),
+                 3: ("pod", "data", "model")}[len(shape)]
+        if ndev > 1:
+            mesh = make_test_mesh(shape, names)
 
     stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
                         if d)
@@ -106,6 +142,7 @@ def main() -> None:
         stripe_dirs=stripe_dirs, codec=args.codec,
         host_mem_budget_bytes=args.host_mem_budget_mb << 20,
         host_offload=args.host_offload,
+        dedupe_replicas=not args.spool_no_dedupe,
         alignment=args.spool_align,
         queue_depth=args.spool_queue_depth,
         pool_bytes=args.spool_pool_mb << 20)
@@ -117,14 +154,15 @@ def main() -> None:
             policy=args.strategy if args.engine == "staged" else None,
             io=io, optimizer=args.optimizer, lr=args.lr,
             batch_size=args.batch, seq_len=args.seq, seed=args.seed,
-            microbatches=args.microbatches,
+            microbatches=args.microbatches, mesh=mesh,
             ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
             metrics_path=args.metrics, spool_dir=args.spool_dir,
             min_offload_elements=args.min_offload,
             install_signal_handlers=(args.engine == "jit")) as session:
 
         print(f"arch={session.cfg.name} "
-              f"params={session.n_params/1e6:.1f}M engine={args.engine}")
+              f"params={session.n_params/1e6:.1f}M engine={args.engine}"
+              + (f" mesh={dict(mesh.shape)}" if mesh is not None else ""))
         if session.cfg.num_layers > 16:
             import jax
             if jax.device_count() == 1:

@@ -124,7 +124,10 @@ def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
                 out = (x_, enc_) if enc_states is not None else x_
                 return out, aux
 
-            wrapped = spooled_scan_body(seg_fn, settings.hook_bridge)
+            wrapped = spooled_scan_body(seg_fn, settings.hook_bridge,
+                                        mesh=settings.mesh,
+                                        dp_axes=settings.dp_axes,
+                                        tp_axis=settings.tp_axis)
             seg_mask = [bool(mask[layer0 + i])
                         if mask is not None and layer0 + i < len(mask)
                         else True

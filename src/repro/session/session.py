@@ -51,6 +51,8 @@ from repro.data.pipeline import ShardedLoader, SyntheticMarkovLM
 from repro.launch.steps import make_host_train_step
 from repro.models.api import build_model
 from repro.models.transformer import RunSettings
+from repro.parallel.sharding import (MeshAxes, param_specs,
+                                     spec_tree_for_optstate)
 from repro.optim.optimizers import Optimizer, adamw, sgd
 from repro.runtime.trainer import (StragglerWatchdog, TrainLoop,
                                    TrainState, batch_tokens)
@@ -126,6 +128,8 @@ class TrainSession:
                  batch_size: int = 8, seq_len: int = 256,
                  seed: int = 0, microbatches: int = 1,
                  settings: Optional[RunSettings] = None,
+                 mesh: Any = None,
+                 mesh_axes: Optional[MeshAxes] = None,
                  loader: Any = None,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
                  keep_last: int = 3,
@@ -145,7 +149,17 @@ class TrainSession:
                 "'activations' per-layer hooks). To drive the jit "
                 "engine from a profiled AdaptivePolicy, pass "
                 "settings=policy.plan_for_jit().apply(settings)")
+        if mesh is not None and engine != "jit":
+            raise ValueError(
+                "mesh-sharded training is a jit-engine feature; the "
+                "staged engine runs per-module jit calls on one device")
         self.engine = engine
+        self.mesh = mesh
+        self.mesh_axes = None
+        if mesh is not None:
+            self.mesh_axes = mesh_axes or MeshAxes(
+                dp=tuple(a for a in mesh.axis_names if a != "model"),
+                tp=("model" if "model" in mesh.axis_names else None))
         self.cfg = (resolve_config(arch) if isinstance(arch, str)
                     else arch.validate())
         self.io = io.validate() if io is not None else None
@@ -218,25 +232,57 @@ class TrainSession:
                 activation_policy=("spool" if mode == "activations"
                                    else "remat"),
                 param_dtype=self.cfg.dtype)
+            if self.mesh is not None and self.settings.mesh is None:
+                # user settings (or the synthesized defaults) predate
+                # the mesh choice: fill in the sharding hints so the
+                # model partitions and the hooks see the mesh
+                self.settings = dataclasses.replace(
+                    self.settings, mesh=self.mesh,
+                    tp_axis=self.mesh_axes.tp,
+                    dp_axes=self.mesh_axes.dp)
             if mode == "activations" \
                     and self.settings.activation_policy == "spool":
                 # per-layer residual streaming: the hooks inside the
                 # jitted step talk to the spool through this bridge
                 from repro.core.hooks import HookBridge
-                self._hook_bridge = HookBridge(self.spool)
+                self._hook_bridge = HookBridge(
+                    self.spool,
+                    dedupe_replicas=(self.io.dedupe_replicas
+                                     if self.io is not None else True))
                 self.settings = dataclasses.replace(
                     self.settings, hook_bridge=self._hook_bridge)
             self._step_fn = make_host_train_step(
-                self.api, self.optimizer, self.settings)
+                self.api, self.optimizer, self.settings,
+                mesh=self.mesh, axes=self.mesh_axes)
 
     # ------------------------------------------------------------ state
 
     def init(self) -> TrainState:
-        """Initialise (or return the current) model/optimizer state."""
+        """Initialise (or return the current) model/optimizer state.
+        With a mesh, params are placed with the production sharding
+        rules (fsdp+tp) and the optimizer state inherits them (ZeRO);
+        the step counter replicates."""
         if self._state is None:
             params = self.api.init(jax.random.key(self.seed))
-            self._state = TrainState(0, params,
-                                     self.optimizer.init(params))
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                p_specs = param_specs(self.cfg, params, self.mesh,
+                                      self.mesh_axes, fsdp=True)
+                as_sh = lambda s: NamedSharding(self.mesh, s)  # noqa: E731
+                params = jax.device_put(
+                    params, jax.tree.map(
+                        as_sh, p_specs,
+                        is_leaf=lambda x: isinstance(x, P)))
+                opt_state = self.optimizer.init(params)
+                o_specs = spec_tree_for_optstate(p_specs, opt_state)
+                opt_state = jax.device_put(
+                    opt_state, jax.tree.map(
+                        as_sh, o_specs,
+                        is_leaf=lambda x: isinstance(x, P)))
+            else:
+                opt_state = self.optimizer.init(params)
+            self._state = TrainState(0, params, opt_state)
         return self._state
 
     @property

@@ -1,10 +1,13 @@
 """Tests for the jit engine's per-layer activation offloading
 (repro.core.hooks): correctness vs the no-offload baseline, tensor
 forwarding under an io_callback fetch racing the store, one
-AdaptivePolicy profile driving both engines, and the staged engine's
-backward-prefetch off-by-one regression."""
+AdaptivePolicy profile driving both engines, the staged engine's
+backward-prefetch off-by-one regression, and the SPMD bridge
+machinery — shard planning, per-shard lease keying under concurrent
+host-callback threads, and the replica-countdown consume protocol."""
 import dataclasses
 import tempfile
+import threading
 import time
 
 import jax
@@ -13,11 +16,12 @@ import pytest
 
 from repro.configs.base import SpoolIoConfig
 from repro.configs.paper_models import small_gpt
-from repro.core.hooks import HookBridge, run_splits
-from repro.core.policies import AdaptivePolicy, JitOffloadPlan, SpoolPolicy
-from repro.core.spool import SpoolStepTransaction
+from repro.core.hooks import HookBridge, plan_shards, run_splits
+from repro.core.policies import (AdaptivePolicy, JitOffloadPlan,
+                                 SpoolPolicy, local_shard_fraction)
+from repro.core.spool import ActivationSpool, SpoolStepTransaction
 from repro.core.staged import StagedTrainer
-from repro.io import FilesystemBackend
+from repro.io import FilesystemBackend, HostMemoryBackend
 from repro.models.transformer import RunSettings
 from repro.session import TrainSession
 
@@ -206,6 +210,224 @@ def test_partial_spool_stages_mask():
         base = sess.run(2)
     assert masked.losses == base.losses            # bitwise
     assert stats.num_stores > 0                    # layer 0 still spools
+
+
+# ----------------------------------------- SPMD bridge machinery
+
+def _mesh_or_skip(shape, names):
+    if jax.device_count() < int(np.prod(shape)):
+        pytest.skip("needs forced host devices")
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(shape, names)
+
+
+def test_plan_shards_specs_and_replica_factorization():
+    """Leaf spec choice: leading dim over dp when divisible, innermost
+    other divisible dim over tp; axes sharding nothing become replica
+    axes (their devices hold identical bytes)."""
+    from jax.sharding import PartitionSpec as P
+    mesh = _mesh_or_skip((1,), ("data",))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 2, "model": 4}
+
+    sds = [jax.ShapeDtypeStruct((8, 32, 128), np.float32),  # dp + tp
+           jax.ShapeDtypeStruct((8, 32, 3), np.float32),    # tp on seq
+           jax.ShapeDtypeStruct((8, 3, 3), np.float32),     # dp only
+           jax.ShapeDtypeStruct((), np.float32)]            # scalar
+    plan = plan_shards(FakeMesh(), ("data",), "model", sds)
+    assert plan.specs[0] == P("data", None, "model")
+    assert plan.specs[1] == P("data", "model", None)   # innermost
+    assert plan.specs[2] == P("data", None, None)      # divisible dim
+    assert plan.specs[3] == P()
+    assert plan.writer_axes == ("data", "model")
+    assert plan.replica_axes == ()
+    assert plan.n_shards == 8 and plan.n_replicas == 1
+    local = plan.local_sds(sds)
+    assert local[0].shape == (4, 32, 32)
+    assert local[1].shape == (4, 8, 3)
+    assert local[2].shape == (4, 3, 3)
+
+    # batch indivisible by dp, no tp -> nothing shards, whole mesh is
+    # one replica group
+    plan2 = plan_shards(FakeMesh(), ("data",), None,
+                        [jax.ShapeDtypeStruct((3, 5), np.float32)])
+    assert plan2.writer_axes == ()
+    assert plan2.replica_axes == ("data", "model")
+    assert plan2.n_shards == 1 and plan2.n_replicas == 8
+
+
+def test_local_shard_fraction_and_scaled_jit_plan():
+    """plan_for_jit(shard_fraction=...) re-plans against the LOCAL
+    per-shard byte volume: a smaller fraction can only offload more
+    layers, and the planned required_bw scales with the bytes."""
+    from repro.core.adaptive import ModuleProfile
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 2}
+
+    assert local_shard_fraction(None) == 1.0
+    assert local_shard_fraction(FakeMesh(), ("data",)) == 0.25
+
+    pol = AdaptivePolicy()
+    profiles = [ModuleProfile(f"seg0_l{i}", 100 << 20, 0.01)
+                for i in range(6)]
+    pol.on_profile(profiles, 2.0e9)      # tight scalar bandwidth
+    full = pol.plan_for_jit()
+    quarter = pol.plan_for_jit(shard_fraction=0.25)
+    assert len(quarter.spool_stages) == len(full.spool_stages) == 6
+    assert sum(quarter.spool_stages) >= sum(full.spool_stages)
+    assert quarter.shard_fraction == 0.25
+    assert quarter.required_bw < full.required_bw or \
+        sum(quarter.spool_stages) > sum(full.spool_stages)
+    with pytest.raises(ValueError):
+        pol.plan_for_jit(shard_fraction=0.0)
+
+
+def test_bridge_replica_countdown_consume():
+    """Satellite fix: a stage fetched once per replica shard is dropped
+    by the LAST fetch only — earlier fetches peek (non-consuming), and
+    the lease closes once every stage of that shard is consumed."""
+    spool = ActivationSpool(HostMemoryBackend(), min_offload_elements=4,
+                            store_threads=1, load_threads=1)
+    bridge = HookBridge(spool, fetch_timeout=5.0)
+    rng = np.random.default_rng(0)
+    arrays = [rng.normal(size=(256,)).astype(np.float32)]
+    bridge.sharded_offload(0, 0, arrays, shard=0, replica=0,
+                           n_replicas=3)
+    bridge.sharded_offload(0, 0, arrays, shard=0, replica=1,
+                           n_replicas=3)     # dedupe: skipped
+    spool.wait_io()
+    for rep in range(3):
+        out = bridge.sharded_fetch(0, 0, shard=0, replica=rep,
+                                   n_replicas=3)
+        np.testing.assert_array_equal(out[0], arrays[0])
+        live = bridge._txs.get("jit0/s0")
+        if rep < 2:
+            assert live is not None and live.has_stage(0)
+        else:
+            assert live is None          # last consumer closed the lease
+    assert not spool._records
+    stats = bridge.stats_by_shard()[0]
+    assert stats["offloads"] == 1 and stats["replica_skips"] == 1
+    assert stats["fetches"] == 3
+    # a 4th fetch of the consumed stage is an error, not a hang
+    bridge.fetch_timeout = 0.2
+    with pytest.raises(KeyError):
+        bridge.sharded_fetch(0, 0, shard=0, replica=0, n_replicas=3)
+    spool.close()
+
+
+def test_bridge_dedupe_disabled_stores_per_replica():
+    spool = ActivationSpool(HostMemoryBackend(), min_offload_elements=4,
+                            store_threads=1, load_threads=1)
+    bridge = HookBridge(spool, dedupe_replicas=False, fetch_timeout=5.0)
+    rng = np.random.default_rng(1)
+    for rep in range(2):
+        bridge.sharded_offload(0, 0, [rng.normal(size=(64,))
+                                      .astype(np.float32)],
+                               shard=1, replica=rep, n_replicas=2)
+    spool.wait_io()
+    assert spool.stats.num_stores == 2   # one blob per replica
+    for rep in range(2):
+        bridge.sharded_fetch(0, 0, shard=1, replica=rep, n_replicas=2)
+    assert not bridge._txs and not spool._records
+    spool.close()
+
+
+def test_bridge_fetch_waits_for_late_offload():
+    """On a mesh the fetch and store callbacks arrive on different
+    threads; a fetch that beats its store must WAIT, not fail."""
+    spool = ActivationSpool(HostMemoryBackend(), min_offload_elements=4,
+                            store_threads=1, load_threads=1)
+    bridge = HookBridge(spool, fetch_timeout=10.0)
+    arr = np.arange(64, dtype=np.float32)
+
+    def late_offload():
+        time.sleep(0.3)
+        bridge.offload(7, 0, [arr], shard=2)
+
+    t = threading.Thread(target=late_offload)
+    t.start()
+    out = bridge.fetch(7, 0, shard=2)    # arrives first, waits
+    t.join()
+    np.testing.assert_array_equal(out[0], arr)
+    assert not bridge._txs
+    spool.close()
+
+
+def test_hook_bridge_concurrent_shard_stress():
+    """Satellite: hammer offload/fetch from N threads emulating XLA
+    host-callback workers across interleaved steps. No cross-step key
+    leaks, and SpoolStats counters sum EXACTLY: every record's bytes
+    are either forwarded (store still in flight / cancelled) or loaded
+    back — never both, never neither."""
+    N_SHARDS, N_STEPS, N_STAGES = 4, 3, 4
+    spool = ActivationSpool(HostMemoryBackend(), min_offload_elements=4,
+                            store_threads=2, load_threads=2)
+    bridge = HookBridge(spool, fetch_timeout=30.0)
+    rng = np.random.default_rng(2)
+    # unique payloads (no dedup aliasing) sized well over the threshold
+    data = {(s, st, sh): rng.normal(size=(512,)).astype(np.float32)
+            for s in range(N_STEPS) for st in range(N_STAGES)
+            for sh in range(N_SHARDS)}
+    errors = []
+
+    def device_thread(shard):
+        try:
+            for step in range(N_STEPS):
+                for stage in range(N_STAGES):
+                    bridge.offload(step, stage,
+                                   [data[(step, stage, shard)]],
+                                   shard=shard)
+                for stage in reversed(range(N_STAGES)):
+                    out = bridge.fetch(step, stage, shard=shard)
+                    np.testing.assert_array_equal(
+                        out[0], data[(step, stage, shard)])
+        except BaseException as e:       # pragma: no cover - fails test
+            errors.append(e)
+
+    threads = [threading.Thread(target=device_thread, args=(sh,))
+               for sh in range(N_SHARDS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    spool.wait_io()
+    assert not errors, errors
+    # no cross-step leaks: every lease closed, no records, no step ids
+    assert not bridge._txs
+    assert not spool._records
+    assert not spool._active_steps
+    # exact accounting
+    total = N_SHARDS * N_STEPS * N_STAGES
+    total_bytes = sum(a.nbytes for a in data.values())
+    by_shard = bridge.stats_by_shard()
+    assert sorted(by_shard) == list(range(N_SHARDS))
+    assert sum(v["offloads"] for v in by_shard.values()) == total
+    assert sum(v["fetches"] for v in by_shard.values()) == total
+    assert sum(v["bytes_in"] for v in by_shard.values()) == total_bytes
+    assert sum(v["bytes_out"] for v in by_shard.values()) == total_bytes
+    st = spool.stats
+    per_rec = data[(0, 0, 0)].nbytes     # uniform record size
+    # every offload enqueued exactly one store job; each completed or
+    # was cancelled by a forwarding fetch
+    assert st.num_stores + st.stores_canceled == total
+    # every fetch either forwarded the in-flight arrays or reloaded the
+    # blob — exactly once per record, partitioning the byte volume
+    assert st.bytes_forwarded % per_rec == 0
+    n_fwd = st.bytes_forwarded // per_rec
+    assert st.num_loads == total - n_fwd
+    # completed stores wrote exactly their logical bytes (+ the serde
+    # container, identical per record); loads read the same blobs back
+    assert st.bytes_offloaded_logical == st.num_stores * per_rec
+    if st.num_stores:
+        encoded_per_rec = st.bytes_offloaded // st.num_stores
+        assert st.bytes_offloaded == st.num_stores * encoded_per_rec
+        assert st.bytes_loaded == st.num_loads * encoded_per_rec
+    spool.close()
 
 
 # ------------------------------------- staged backward-prefetch fix
