@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.hostcb import raw_io_callback as io_callback
 from repro.core.spool import ActivationSpool, SpoolStepTransaction
 from repro.parallel.shmap import (axes_size, canonical_axis_entry,
@@ -220,11 +221,15 @@ class HookBridge:
         returns, and the spool's store worker runs after that. A plain
         owned memcpy also never touches the jax runtime — a device
         thread must not block on jax's async machinery mid-step."""
-        arrays = [np.array(a, copy=True) for a in arrays]
-        tx = self._tx(self._step_id(step, shard))
-        tx.offload(stage, arrays, consumers=consumers)
+        with obs.span("hook.offload", cat="hook", step=step, stage=stage,
+                      shard=shard) as sp:
+            arrays = [np.array(a, copy=True) for a in arrays]
+            tx = self._tx(self._step_id(step, shard))
+            tx.offload(stage, arrays, consumers=consumers)
+            nbytes = int(sum(a.nbytes for a in arrays))
+            sp.set(bytes=nbytes)
         self._note(shard, "offloads")
-        self._note(shard, "bytes_in", int(sum(a.nbytes for a in arrays)))
+        self._note(shard, "bytes_in", nbytes)
         with self._cv:
             self._cv.notify_all()
 
@@ -240,6 +245,8 @@ class HookBridge:
                              consumers=n_replicas)
             else:
                 self._note(shard, "replica_skips")
+                obs.instant("hook.replica_skip", cat="hook", step=step,
+                            stage=stage, shard=shard, replica=replica)
         else:
             self.offload(step, stage, arrays,
                          shard=shard * n_replicas + replica)
@@ -260,28 +267,34 @@ class HookBridge:
         # lease there is a bug — fail fast instead of timing out
         wait = self.fetch_timeout if shard is not None else 0.0
         deadline = time.monotonic() + wait
-        with self._cv:
-            while True:
-                tx = self._txs.get(step_id)
-                if tx is not None and tx.has_stage(stage):
-                    break
-                left = deadline - time.monotonic()
-                if left <= 0:
-                    raise KeyError(
-                        f"no live spool record for step {step_id!r} "
-                        f"stage {stage} after {wait:.0f}s "
-                        f"— was the forward offload callback dropped?")
-                self._cv.wait(timeout=min(left, 1.0))
-        tx.prefetch(stage - 1)
-        # to_device=False: the callback returns host arrays straight to
-        # XLA — converting through jnp would device_put on the callback
-        # thread, the exact jax-runtime dependence raw_io_callback
-        # exists to avoid
-        out = tx.consume(stage, to_device=False)
-        arrays = [np.asarray(a) for a in out]
+        with obs.span("hook.fetch", cat="hook", step=step, stage=stage,
+                      shard=shard) as fsp:
+            with obs.span("hook.wait_store", cat="hook", step=step,
+                          stage=stage, shard=shard):
+                with self._cv:
+                    while True:
+                        tx = self._txs.get(step_id)
+                        if tx is not None and tx.has_stage(stage):
+                            break
+                        left = deadline - time.monotonic()
+                        if left <= 0:
+                            raise KeyError(
+                                f"no live spool record for step "
+                                f"{step_id!r} stage {stage} after "
+                                f"{wait:.0f}s — was the forward offload "
+                                f"callback dropped?")
+                        self._cv.wait(timeout=min(left, 1.0))
+            tx.prefetch(stage - 1)
+            # to_device=False: the callback returns host arrays straight
+            # to XLA — converting through jnp would device_put on the
+            # callback thread, the exact jax-runtime dependence
+            # raw_io_callback exists to avoid
+            out = tx.consume(stage, to_device=False)
+            arrays = [np.asarray(a) for a in out]
+            nbytes = int(sum(a.nbytes for a in arrays))
+            fsp.set(bytes=nbytes)
         self._note(shard, "fetches")
-        self._note(shard, "bytes_out",
-                   int(sum(a.nbytes for a in arrays)))
+        self._note(shard, "bytes_out", nbytes)
         with self._lock:
             if not tx.live_stages and self._txs.get(step_id) is tx:
                 del self._txs[step_id]

@@ -103,11 +103,22 @@ def raw_io_callback(callback: Callable[..., Any], result_shape_dtypes,
     single = hasattr(result_shape_dtypes, "shape")
     sds: Tuple = ((result_shape_dtypes,) if single
                   else tuple(result_shape_dtypes))
+
+    # span per host invocation, named after the hook function — these
+    # run on XLA's host-callback threads, so they are what ties the
+    # device schedule to spool activity on the trace timeline
+    from repro import obs
+    span_name = "hostcb." + getattr(callback, "__name__", "cb")
+
+    def traced_callback(*flat_args):
+        with obs.span(span_name, cat="hostcb"):
+            return callback(*flat_args)
+
     if not RAW_CALLBACK_AVAILABLE:  # pragma: no cover - fallback path
         from jax.experimental import io_callback
-        return io_callback(callback, result_shape_dtypes, *args)
+        return io_callback(traced_callback, result_shape_dtypes, *args)
     result_avals = tuple(
         _jcore.ShapedArray(tuple(s.shape), s.dtype) for s in sds)
-    out = raw_callback_p.bind(*args, callback=callback,
+    out = raw_callback_p.bind(*args, callback=traced_callback,
                               result_avals=result_avals)
     return out[0] if single else tuple(out)

@@ -27,9 +27,20 @@ class StepReport:
     # engine-specific scalar metrics (jit: the step's full aux dict —
     # ce, tokens, moe_lb/moe_z on MoE archs, ...); merged into the JSONL
     extra: Dict[str, float] = field(default_factory=dict)
+    # repro.obs overlap analysis for THIS step's trace window (see
+    # repro.obs.overlap.analyze); emitted with an obs_ prefix
+    obs: Optional[Dict[str, Any]] = None
+    # per-shard HookBridge traffic deltas for this step, keyed by shard
+    # id ("global" on a single device)
+    shard_stats: Optional[Dict[str, Dict[str, int]]] = None
 
     def to_metrics(self) -> Dict[str, Any]:
-        """Flat JSON-able dict — the unified metrics-JSONL schema."""
+        """Flat JSON-able dict — the unified metrics-JSONL schema.
+
+        The spool fields are PER-STEP deltas: both engines snapshot
+        `SpoolStats` at step boundaries and hand the report the
+        difference, so a JSONL row describes its own step, not the run
+        so far."""
         rec: Dict[str, Any] = {
             "step": self.step,
             "engine": self.engine,
@@ -46,6 +57,11 @@ class StepReport:
             rec["fetch_wait_s"] = float(self.stats.fetch_wait_time)
         if self.plan is not None:
             rec["plan_last_offloaded"] = int(self.plan.last_offloaded)
+        if self.obs:
+            for k, v in self.obs.items():
+                rec[f"obs_{k}"] = v
+        if self.shard_stats:
+            rec["shards"] = self.shard_stats
         for k, v in self.extra.items():
             rec.setdefault(k, v)
         return rec

@@ -32,6 +32,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.core.accounting import MemoryTracker
 from repro.core.adaptive import TierBandwidth
 from repro.core.ids import TensorIdRegistry, _buffer_key
@@ -140,10 +141,26 @@ class SpoolStats:
 
     __add__ = add
 
+    def sub(self, other: "SpoolStats") -> "SpoolStats":
+        """Field-wise difference — turns two cumulative snapshots into
+        a per-step delta (`new.sub(old)`)."""
+        import dataclasses as _dc
+        return SpoolStats(**{
+            f.name: getattr(self, f.name) - getattr(other, f.name)
+            for f in _dc.fields(SpoolStats)})
+
+    __sub__ = sub
+
+    def snapshot(self) -> "SpoolStats":
+        """Value copy of a live (mutating) stats object, safe to diff
+        against later."""
+        import dataclasses as _dc
+        return _dc.replace(self)
+
 
 class _Job:
     __slots__ = ("key", "arrays", "state", "cond", "kind", "orphaned",
-                 "error", "reg_keys")
+                 "error", "reg_keys", "prefetched")
 
     def __init__(self, key, arrays, kind):
         self.key = key
@@ -153,6 +170,10 @@ class _Job:
         self.kind = kind  # "store" | "load"
         self.orphaned = False  # dropped while the store was running
         self.error = None      # exception raised by the worker, if any
+        # load jobs: issued by an explicit prefetch() hint (vs. fetch's
+        # own demand load) — the distinction behind prefetch hit/late/
+        # ghost accounting in repro.obs
+        self.prefetched = False
         # dedup-registry keys for the spooled leaves; released by
         # whoever drops the last reference to self.arrays (the store
         # worker on success, drop() otherwise) — releasing later than
@@ -465,6 +486,10 @@ class ActivationSpool:
                 "acquired": acquired,
             }
         self._store_q.put(job)
+        if obs.is_enabled():
+            obs.instant("spool.offload", cat="spool", key=str(key),
+                        bytes=nbytes)
+            obs.gauge("spool.store_backlog", self._store_q.qsize())
 
     def keep(self, key, tree) -> None:
         """Record a kept-in-memory pytree (adaptive offloading keeps the
@@ -481,7 +506,7 @@ class ActivationSpool:
                 "load_lease": None, "acquired": [],
             }
 
-    def prefetch(self, key) -> None:
+    def prefetch(self, key, *, _demand: bool = False) -> None:
         with self._lock:
             rec = self._records.get(key)
             if rec is None or not rec["spool_idx"]:
@@ -499,7 +524,11 @@ class ActivationSpool:
             if rec["load_job"] is not None or rec["loaded"] is not None:
                 return
             lj = _Job(key, None, "load")
+            lj.prefetched = not _demand
             rec["load_job"] = lj
+        if not _demand:
+            obs.count("prefetch.issued")
+            obs.instant("spool.prefetch", cat="spool", key=str(key))
         self._load_q.put(lj)
 
     def fetch(self, key, *, cancel_pending: bool = True,
@@ -556,14 +585,24 @@ class ActivationSpool:
                 with self._lock:
                     lj = rec["load_job"]
                 if lj is None:
-                    self.prefetch(key)
+                    self.prefetch(key, _demand=True)
                     with self._lock:
                         lj = rec["load_job"]
                 if lj is not None:
+                    if lj.prefetched:
+                        # hit: the prefetched load already landed when
+                        # the consumer arrived; late: issued but the
+                        # consumer still has to wait for it
+                        with lj.cond:
+                            ready = lj.state in (DONE, CANCELED)
+                        obs.count("prefetch.hit" if ready
+                                  else "prefetch.late")
                     t_wait = time.perf_counter()
-                    with lj.cond:
-                        while lj.state not in (DONE, CANCELED):
-                            lj.cond.wait()
+                    with obs.span("spool.fetch_wait", cat="spool",
+                                  key=str(key)):
+                        with lj.cond:
+                            while lj.state not in (DONE, CANCELED):
+                                lj.cond.wait()
                     self.stats.fetch_wait_time += (time.perf_counter()
                                                    - t_wait)
                     if lj.error is not None:
@@ -571,6 +610,7 @@ class ActivationSpool:
                             f"spool load failed for {key!r}") from lj.error
                 with self._lock:
                     spooled = rec["loaded"]
+                    rec["load_used"] = True
                 self.tracker.alloc((key, "s"), rec["nbytes"],
                                    tag=f"reloaded:{key}")
         leaves = [None] * rec["n_leaves"]
@@ -598,6 +638,11 @@ class ActivationSpool:
             rec = self._records.pop(key, None)
         if rec is None:
             return
+        lj = rec.get("load_job")
+        if lj is not None and lj.prefetched and not rec.get("load_used"):
+            # ghost: prefetched from the backend but dropped unread —
+            # wasted read bandwidth the planner should know about
+            obs.count("prefetch.ghost")
         for bkey in rec["acquired"]:
             self.registry.release_key(bkey)
         job = rec["job"]
@@ -764,21 +809,27 @@ class ActivationSpool:
             job.state = RUNNING
         t0 = time.perf_counter()
         if job.kind == "store":
-            arrays = [np.asarray(a) for a in job.arrays]
-            # vectored store: the serde part list flows through the
-            # codec container straight to backend.write_parts — with the
-            # raw codec on a vectored backend the payload is never
-            # joined or copied on the host at all
-            parts = encode_parts(serialize_parts(arrays), self.codec)
-            nbytes = sum(len(p) if not isinstance(p, memoryview)
-                         else p.nbytes for p in parts)
-            self.backend.write_parts(str(job.key), parts)
-            dt = time.perf_counter() - t0
-            if self._bw:
-                min_t = nbytes / self._bw
-                if dt < min_t:
-                    time.sleep(min_t - dt)
-                    dt = min_t
+            with obs.span("spool.store", cat="spool",
+                          key=str(job.key)) as store_sp:
+                arrays = [np.asarray(a) for a in job.arrays]
+                # vectored store: the serde part list flows through the
+                # codec container straight to backend.write_parts — with
+                # the raw codec on a vectored backend the payload is
+                # never joined or copied on the host at all
+                with obs.span("codec.encode", cat="codec",
+                              key=str(job.key)):
+                    parts = encode_parts(serialize_parts(arrays),
+                                         self.codec)
+                nbytes = sum(len(p) if not isinstance(p, memoryview)
+                             else p.nbytes for p in parts)
+                self.backend.write_parts(str(job.key), parts)
+                dt = time.perf_counter() - t0
+                if self._bw:
+                    min_t = nbytes / self._bw
+                    if dt < min_t:
+                        time.sleep(min_t - dt)
+                        dt = min_t
+                store_sp.set(bytes=nbytes)
             self.stats.bytes_offloaded += nbytes
             self.stats.bytes_offloaded_logical += \
                 sum(a.nbytes for a in arrays)
@@ -815,44 +866,48 @@ class ActivationSpool:
             # lease lives until the record is dropped (fetch copies on
             # demand when it materializes device arrays).
             lease = None
-            # RAM-backed stores hand the blob back by reference — a
-            # pooled staging copy would only ADD a memcpy there
-            nbytes = None if self.backend.zero_copy_read \
-                else self.backend.size(key)
-            if nbytes is not None and nbytes > 0:
-                lease = self.pool.acquire(nbytes)
+            with obs.span("spool.load", cat="spool", key=key) as load_sp:
+                # RAM-backed stores hand the blob back by reference — a
+                # pooled staging copy would only ADD a memcpy there
+                nbytes = None if self.backend.zero_copy_read \
+                    else self.backend.size(key)
+                if nbytes is not None and nbytes > 0:
+                    lease = self.pool.acquire(nbytes)
+                    try:
+                        blob = self.backend.readinto(key, lease.mv)
+                    except BaseException:
+                        lease.release()
+                        raise
+                    nread = len(blob)
+                else:
+                    blob = self.backend.read(key)
+                    nread = len(blob)
                 try:
-                    blob = self.backend.readinto(key, lease.mv)
+                    with obs.span("codec.decode", cat="codec", key=key):
+                        payload, aliases = unpack_aliased(blob)
+                        # non-aliasing payloads (codec decodes) own
+                        # fresh memory: leave the views writable so
+                        # fetch's copy-on-demand doesn't pay a
+                        # redundant memcpy
+                        arrays = deserialize_leaves(payload, copy=False,
+                                                    pinned=aliases)
                 except BaseException:
-                    lease.release()
+                    if lease is not None:
+                        lease.release()
                     raise
-                nread = len(blob)
-            else:
-                blob = self.backend.read(key)
-                nread = len(blob)
-            try:
-                payload, aliases = unpack_aliased(blob)
-                # non-aliasing payloads (codec decodes) own fresh
-                # memory: leave the views writable so fetch's
-                # copy-on-demand doesn't pay a redundant memcpy
-                arrays = deserialize_leaves(payload, copy=False,
-                                            pinned=aliases)
-            except BaseException:
-                if lease is not None:
+                if lease is not None and not aliases:
+                    # decoding codecs hand back fresh memory: nothing
+                    # borrows the pooled buffer, recycle it immediately
+                    # instead of pinning it until drop()
                     lease.release()
-                raise
-            if lease is not None and not aliases:
-                # decoding codecs hand back fresh memory: nothing
-                # borrows the pooled buffer, recycle it immediately
-                # instead of pinning it until drop()
-                lease.release()
-                lease = None
-            dt = time.perf_counter() - t0
-            if self._bw:
-                min_t = nread / self._bw
-                if dt < min_t:
-                    time.sleep(min_t - dt)
-                    dt = min_t
+                    lease = None
+                dt = time.perf_counter() - t0
+                if self._bw:
+                    min_t = nread / self._bw
+                    if dt < min_t:
+                        time.sleep(min_t - dt)
+                        dt = min_t
+                load_sp.set(bytes=nread)
             self.stats.bytes_loaded += nread
             self.stats.load_time += dt
             self.stats.num_loads += 1

@@ -42,6 +42,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.accounting import MemoryTracker
 from repro.core.adaptive import ModuleProfile, OffloadPlan
 from repro.core.policies import OffloadPolicy, resolve_policy
@@ -286,19 +287,24 @@ class StagedTrainer:
         profiles = [ModuleProfile(s.name, 0, 0.0) for s in self._stages]
         bwd_begin_bytes = 0
 
-        for mb, batch in enumerate(batches):
-            with self.spool.step(f"mb{mb}") as tx:
-                grads, loss_total, bwd_begin_bytes = self._run_microbatch(
-                    tx, mb, batch, stage_params, n_stages, grads,
-                    loss_total, profiles, bwd_begin_bytes)
+        with obs.span("engine.step", cat="engine", step=self._step,
+                      engine="staged"):
+            for mb, batch in enumerate(batches):
+                with self.spool.step(f"mb{mb}") as tx:
+                    grads, loss_total, bwd_begin_bytes = \
+                        self._run_microbatch(
+                            tx, mb, batch, stage_params, n_stages, grads,
+                            loss_total, profiles, bwd_begin_bytes)
 
-        # ---------------- optimizer ----------------
-        grads_tree = self._unstage_grads(grads)
-        scale = 1.0 / len(batches)
-        grads_tree = jax.tree.map(lambda g_: g_ * scale, grads_tree)
-        params, opt_state = self.optimizer.update(grads_tree, opt_state,
-                                                  params)
-        jax.block_until_ready(jax.tree.leaves(params)[0])
+            # ---------------- optimizer ----------------
+            with obs.span("engine.update", cat="engine", step=self._step):
+                grads_tree = self._unstage_grads(grads)
+                scale = 1.0 / len(batches)
+                grads_tree = jax.tree.map(lambda g_: g_ * scale,
+                                          grads_tree)
+                params, opt_state = self.optimizer.update(
+                    grads_tree, opt_state, params)
+                jax.block_until_ready(jax.tree.leaves(params)[0])
         # The store tail is NOT synchronised here: adaptive offloading
         # (§3.3.3) schedules writes to complete inside the backward pass,
         # and any residue overlaps the next step's forward. Only the
@@ -334,6 +340,9 @@ class StagedTrainer:
         kept: Dict[int, Any] = {}
         recompute_in: Dict[int, Any] = {}
         loss = None
+        fwd_sp = obs.span("engine.fwd", cat="engine", step=self._step,
+                          mb=mb)
+        fwd_sp.__enter__()
         for si, stage in enumerate(self._stages):
             args = self._args_for(stage, batch, x, xe, enc)
             tin = time.perf_counter()
@@ -383,6 +392,7 @@ class StagedTrainer:
                 stage.cell.setdefault("resid_idx", tuple(r_leaves))
             del leaves
 
+        fwd_sp.__exit__(None, None, None)
         self.tracker.mark(f"backward_begin_{tx.step_id}")
         bwd_begin_bytes = max(bwd_begin_bytes, self.tracker.current)
 
@@ -391,6 +401,9 @@ class StagedTrainer:
         mb_grads: List[Any] = [None] * n_stages
         carry_g = g
         enc_grad = None
+        bwd_sp = obs.span("engine.bwd", cat="engine", step=self._step,
+                          mb=mb)
+        bwd_sp.__enter__()
         for si in range(n_stages - 1, -1, -1):
             stage = self._stages[si]
             if si - 1 >= 0:
@@ -432,6 +445,7 @@ class StagedTrainer:
             elif stage.role in ("enc_final", "enc_layer"):
                 carry_g = dargs[0]
             # enc_embed / vlm_enc: chain ends
+        bwd_sp.__exit__(None, None, None)
         loss_total += float(loss)
         if grads is None:
             grads = mb_grads

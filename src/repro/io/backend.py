@@ -39,6 +39,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Type
 
+from repro import obs
 from repro.core.adaptive import TierBandwidth
 
 # Nominal sequential-write bandwidths (bytes/s) per backend kind, used by
@@ -197,7 +198,9 @@ class StorageBackend(abc.ABC):
     def write(self, key: str, data: bytes) -> None:
         self._enter("w")
         try:
-            self._write(key, data)
+            with obs.span("io.write", cat="io", key=key, kind=self.kind,
+                          bytes=len(data)):
+                self._write(key, data)
         except BaseException:
             self._exit("w")
             raise
@@ -215,7 +218,9 @@ class StorageBackend(abc.ABC):
         nbytes = sum(len(p) for p in parts)
         self._enter("w")
         try:
-            self._write_parts(key, parts)
+            with obs.span("io.write", cat="io", key=key, kind=self.kind,
+                          bytes=nbytes):
+                self._write_parts(key, parts)
         except BaseException:
             self._exit("w")
             raise
@@ -228,7 +233,10 @@ class StorageBackend(abc.ABC):
     def read(self, key: str) -> bytes:
         self._enter("r")
         try:
-            data = self._read(key)
+            with obs.span("io.read", cat="io", key=key,
+                          kind=self.kind) as sp:
+                data = self._read(key)
+                sp.set(bytes=len(data))
         except BaseException:
             self._exit("r")
             raise
@@ -247,7 +255,10 @@ class StorageBackend(abc.ABC):
         mv = buf if isinstance(buf, memoryview) else memoryview(buf)
         self._enter("r")
         try:
-            n = self._readinto(key, mv)
+            with obs.span("io.read", cat="io", key=key,
+                          kind=self.kind) as sp:
+                n = self._readinto(key, mv)
+                sp.set(bytes=n)
         except BaseException:
             self._exit("r")
             raise

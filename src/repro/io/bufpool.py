@@ -20,6 +20,8 @@ import mmap
 import threading
 from typing import Dict, List, Optional
 
+from repro import obs
+
 #: O_DIRECT-compatible default: one x86 page / the common LBA-format size.
 DEFAULT_ALIGNMENT = 4096
 
@@ -109,9 +111,14 @@ class AlignedBufferPool:
                 mm = bucket.pop()
                 self._free_bytes -= cap
                 self.hits += 1
+                obs.count("pool.hit")
                 return PooledBuffer(self, mm, cap, nbytes)
             self.misses += 1
             self.bytes_allocated += cap
+        obs.count("pool.miss")
+        # a miss is a fresh mmap whose pages fault on first touch — the
+        # exact churn MemAscend measures, so it earns a timeline mark
+        obs.instant("pool.miss", cat="pool", bytes=cap)
         # mmap outside the lock: faulting fresh pages is the slow part
         return PooledBuffer(self, mmap.mmap(-1, cap), cap, nbytes)
 
@@ -122,6 +129,7 @@ class AlignedBufferPool:
                 self._free_bytes += cap
                 return
             self.trimmed += 1
+        obs.count("pool.trim")
         try:
             mm.close()
         except BufferError:

@@ -46,6 +46,36 @@ def model_flops(kind: str, n_params: int, n_active: int,
     return (6.0 if kind == "train" else 2.0) * n * tokens
 
 
+def _predict_overlap(host_bytes: float, write_bw: float,
+                     t_compute: float) -> Dict[str, Any]:
+    """Roofline prediction of how much activation I/O the step can hide.
+
+    SSDTrain's schedule writes each layer's residuals during the forward
+    pass and reads them back during the backward pass, so the store
+    window is the forward compute time and the fetch window the backward
+    compute time (fwd:bwd ~ 1:2 of the 6ND step). Whatever part of each
+    transfer does not fit its window is exposed stall; the keys match
+    `repro.obs.overlap.analyze()` so `predicted_vs_measured()` can pair
+    this block with a traced run.
+    """
+    t_store = host_bytes / write_bw          # offload: fwd-side writes
+    t_fetch = host_bytes / write_bw          # fetch: bwd-side reads
+    t_io = t_store + t_fetch
+    t_fwd = t_compute / 3.0                  # 2ND of the 6ND step
+    t_bwd = t_compute * 2.0 / 3.0            # 4ND of the 6ND step
+    exposed = (max(0.0, t_store - t_fwd) + max(0.0, t_fetch - t_bwd))
+    return {
+        "t_store_s": t_store,
+        "t_fetch_s": t_fetch,
+        "t_io_s": t_io,
+        "t_fwd_s": t_fwd,
+        "t_bwd_s": t_bwd,
+        "per_stage_io_s": {"fwd_store": t_store, "bwd_fetch": t_fetch},
+        "exposed_wait_s": exposed,
+        "io_hidden_frac": (1.0 - exposed / t_io) if t_io > 0 else 1.0,
+    }
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              out_dir: str, dump_hlo: bool = False,
              policy: Optional[str] = None, attn_chunk: int = 1024,
@@ -162,6 +192,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 "t_host_io_s": (ana.host_bytes
                                 / NOMINAL_WRITE_BW[io_backend]),
             },
+            # Predicted overlap for the SSDTrain schedule: stores overlap
+            # the forward pass, fetches overlap the backward pass. The
+            # fields mirror repro.obs.overlap.analyze() so a --trace run
+            # can be checked against this prediction with
+            # repro.obs.overlap.predicted_vs_measured().
+            predicted_overlap=_predict_overlap(
+                ana.host_bytes, NOMINAL_WRITE_BW[io_backend], t_compute),
         )
     except Exception as e:  # record the failure, don't kill the sweep
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
@@ -285,6 +322,15 @@ def main() -> None:
                   f"t=(c {rl['t_compute_s']:.3e}, m {rl['t_memory_s']:.3e},"
                   f" coll {rl['t_collective_s']:.3e})s")
             print("memory:", rec["memory_analysis"])
+            po = rec.get("predicted_overlap")
+            if po:
+                print(f"predicted overlap [{rl['io_backend']}]: "
+                      f"{po['io_hidden_frac']:.0%} of "
+                      f"{po['t_io_s']:.3e}s I/O hidden "
+                      f"(store {po['t_store_s']:.3e}s in fwd "
+                      f"{po['t_fwd_s']:.3e}s, fetch "
+                      f"{po['t_fetch_s']:.3e}s in bwd "
+                      f"{po['t_bwd_s']:.3e}s)")
         elif status == "skip":
             print(f"{args.arch} x {args.shape} [{mesh_name}] SKIP: "
                   f"{rec['skip_reason']}")

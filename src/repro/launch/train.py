@@ -109,6 +109,14 @@ def main() -> None:
                     help="mesh activation offload: store one residual "
                          "copy PER DEVICE instead of one per replica "
                          "group (debugging / bandwidth experiments)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable repro.obs tracing and write a Chrome/"
+                         "Perfetto trace-event JSON here on exit "
+                         "(load it at https://ui.perfetto.dev)")
+    ap.add_argument("--trace-ring", type=int, default=0,
+                    help="per-thread trace ring capacity in events "
+                         "(default 65536; older events are dropped and "
+                         "counted when a ring fills)")
     args = ap.parse_args()
 
     mesh = None
@@ -158,6 +166,7 @@ def main() -> None:
             ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
             metrics_path=args.metrics, spool_dir=args.spool_dir,
             min_offload_elements=args.min_offload,
+            trace=args.trace, trace_ring=args.trace_ring,
             install_signal_handlers=(args.engine == "jit")) as session:
 
         print(f"arch={session.cfg.name} "
@@ -205,12 +214,29 @@ def main() -> None:
                 per_dev = bk.per_device_write_bytes()
                 print("stripe write balance:",
                       [f"{b/1e6:.1f}MB" for b in per_dev], flush=True)
+        if args.trace:
+            last_obs = next((r.obs for r in reversed(result.reports)
+                             if r.obs), None)
+            if last_obs and last_obs["io_busy_s"] > 0:
+                print(f"overlap (last step): "
+                      f"{last_obs['io_hidden_frac']:.0%} of "
+                      f"{last_obs['io_busy_s']*1e3:.1f} ms I/O hidden "
+                      f"under compute; exposed stalls: read "
+                      f"{last_obs['stall_read_s']*1e3:.1f} ms, decode "
+                      f"{last_obs['stall_decode_s']*1e3:.1f} ms, queue "
+                      f"{last_obs['stall_queue_s']*1e3:.1f} ms; "
+                      f"prefetch hit rate "
+                      f"{last_obs['prefetch_hit_rate']:.0%}", flush=True)
         if args.engine == "jit":
             flagged = (len(session.watchdog.flagged)
                        if session.watchdog else 0)
             print(f"done: {result.state.step} steps in {dt:.1f}s "
                   f"({args.steps and dt/args.steps:.2f}s/step); "
                   f"stragglers flagged: {flagged}")
+
+    # the session just closed — the trace file exists now
+    if args.trace:
+        print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

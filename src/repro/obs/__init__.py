@@ -1,0 +1,44 @@
+"""repro.obs — overlap-proving trace and telemetry subsystem.
+
+Always-compiled-in instrumentation for the activation-offload path:
+a lock-light per-thread ring tracer (`repro.obs.tracer`), a
+Chrome/Perfetto exporter + validator (`repro.obs.export`), and the
+overlap analyzer that turns a trace window into I/O-hidden fraction and
+stall attribution (`repro.obs.overlap`).
+
+Call sites use the module-level helpers (`span`/`instant`/`count`/
+`gauge`), which are a None-check no-op until `enable()` installs a
+tracer — usually via `TrainSession(trace=...)` or `--trace`.
+"""
+from repro.obs.tracer import (
+    DEFAULT_RING_SIZE,
+    Tracer,
+    count,
+    disable,
+    enable,
+    gauge,
+    get_tracer,
+    instant,
+    is_enabled,
+    span,
+)
+from repro.obs.export import trace_events, validate_trace, write_chrome_trace
+from repro.obs.overlap import analyze, predicted_vs_measured
+
+__all__ = [
+    "DEFAULT_RING_SIZE",
+    "Tracer",
+    "analyze",
+    "count",
+    "disable",
+    "enable",
+    "gauge",
+    "get_tracer",
+    "instant",
+    "is_enabled",
+    "predicted_vs_measured",
+    "span",
+    "trace_events",
+    "validate_trace",
+    "write_chrome_trace",
+]

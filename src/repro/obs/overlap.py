@@ -1,0 +1,163 @@
+"""Overlap analyzer: turn a trace window into the paper's claim.
+
+SSDTrain's pitch is that activation I/O is *hidden* — the SSD traffic
+happens while the accelerator computes, so the training loop never
+waits. `analyze()` computes that as numbers from a window of trace
+events (typically one step, fed from `Tracer.snapshot_new`):
+
+  io_busy_s        union of backend I/O span time (writes + reads)
+  exposed_wait_s   union of `spool.fetch_wait` spans — the time a
+                   consumer was actually blocked on the spool
+  io_hidden_frac   1 - exposed/io_busy, clamped to [0, 1] — the
+                   fraction of I/O that compute paid for
+
+plus stall attribution: each exposed fetch-wait interval is intersected
+with the same-key backend read and codec decode spans, splitting the
+wait into "waiting for the disk", "waiting for the decoder", and the
+remainder "waiting in queue" (job not yet scheduled on a load worker).
+
+Counters (from `Tracer.counters()` deltas) contribute prefetch
+hit/late/ghost rates. Everything lands in `StepReport.to_metrics()` as
+`obs_*` fields, and `predicted_vs_measured` closes the loop against the
+dryrun planner's roofline.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.obs.tracer import TraceEvent
+
+Interval = Tuple[int, int]      # (start_ns, end_ns]
+
+#: span names produced by the instrumentation layer (single source of
+#: truth so the analyzer and the call sites cannot drift apart)
+IO_SPANS = ("io.write", "io.read")
+DECODE_SPAN = "codec.decode"
+ENCODE_SPAN = "codec.encode"
+FETCH_WAIT_SPAN = "spool.fetch_wait"
+STORE_SPAN = "spool.store"
+LOAD_SPAN = "spool.load"
+
+
+def _union(intervals: Iterable[Interval]) -> List[Interval]:
+    """Merge overlapping intervals; returns a sorted disjoint list."""
+    ivs = sorted(i for i in intervals if i[1] > i[0])
+    out: List[Interval] = []
+    for lo, hi in ivs:
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def _total(intervals: Iterable[Interval]) -> int:
+    return sum(hi - lo for lo, hi in _union(intervals))
+
+
+def _intersect(a: Sequence[Interval], b: Sequence[Interval]) -> int:
+    """Total overlap (ns) between two disjoint sorted interval lists."""
+    total = 0
+    i = j = 0
+    a = _union(a)
+    b = _union(b)
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            total += hi - lo
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def _spans(events: Iterable[TraceEvent], names: Tuple[str, ...]
+           ) -> List[TraceEvent]:
+    return [ev for ev in events if ev[0] in names and ev[3] >= 0]
+
+
+def _iv(ev: TraceEvent) -> Interval:
+    return (ev[2], ev[2] + ev[3])
+
+
+def analyze(events: Sequence[TraceEvent],
+            counters: Optional[Dict[str, float]] = None
+            ) -> Dict[str, Any]:
+    """Analyze one window of trace events (see module docstring).
+
+    `counters` is a delta of `Tracer.counters()` over the same window;
+    prefetch rates are 0 when absent. All durations come back in
+    seconds, fractions in [0, 1]."""
+    io = _spans(events, IO_SPANS)
+    waits = _spans(events, (FETCH_WAIT_SPAN,))
+    decodes = _spans(events, (DECODE_SPAN,))
+    encodes = _spans(events, (ENCODE_SPAN,))
+    stores = _spans(events, (STORE_SPAN,))
+    loads = _spans(events, (LOAD_SPAN,))
+
+    io_busy_ns = _total(map(_iv, io))
+    exposed_ns = _total(map(_iv, waits))
+
+    # stall attribution: for each exposed wait, how much of it was the
+    # same key's disk read vs. decode; the rest was queueing
+    reads_by_key: Dict[Any, List[Interval]] = {}
+    for ev in io:
+        if ev[0] == "io.read":
+            reads_by_key.setdefault(ev[4].get("key"), []).append(_iv(ev))
+    dec_by_key: Dict[Any, List[Interval]] = {}
+    for ev in decodes:
+        dec_by_key.setdefault(ev[4].get("key"), []).append(_iv(ev))
+
+    stall_read_ns = 0
+    stall_decode_ns = 0
+    for ev in waits:
+        key = ev[4].get("key")
+        w = [_iv(ev)]
+        stall_read_ns += _intersect(w, reads_by_key.get(key, []))
+        stall_decode_ns += _intersect(w, dec_by_key.get(key, []))
+    stall_queue_ns = max(0, exposed_ns - stall_read_ns - stall_decode_ns)
+
+    if io_busy_ns > 0:
+        hidden = 1.0 - min(exposed_ns, io_busy_ns) / io_busy_ns
+    else:
+        hidden = 1.0 if exposed_ns == 0 else 0.0
+
+    c = counters or {}
+    issued = c.get("prefetch.issued", 0)
+    res = {
+        "io_busy_s": io_busy_ns / 1e9,
+        "exposed_wait_s": exposed_ns / 1e9,
+        "io_hidden_frac": hidden,
+        "stall_read_s": stall_read_ns / 1e9,
+        "stall_decode_s": stall_decode_ns / 1e9,
+        "stall_queue_s": stall_queue_ns / 1e9,
+        "encode_s": _total(map(_iv, encodes)) / 1e9,
+        "decode_s": _total(map(_iv, decodes)) / 1e9,
+        "store_s": _total(map(_iv, stores)) / 1e9,
+        "load_s": _total(map(_iv, loads)) / 1e9,
+        "prefetch_issued": int(issued),
+        "prefetch_hit": int(c.get("prefetch.hit", 0)),
+        "prefetch_late": int(c.get("prefetch.late", 0)),
+        "prefetch_ghost": int(c.get("prefetch.ghost", 0)),
+    }
+    res["prefetch_hit_rate"] = (
+        res["prefetch_hit"] / issued if issued else 0.0)
+    return res
+
+
+def predicted_vs_measured(predicted: Dict[str, Any],
+                          measured: Dict[str, Any]) -> Dict[str, Any]:
+    """Compare a dryrun `predicted_overlap` block against a measured
+    `analyze()` result — the TierBandwidth calibration check. Returns
+    the paired numbers plus the hidden-fraction error."""
+    p_hidden = float(predicted.get("io_hidden_frac", 0.0))
+    m_hidden = float(measured.get("io_hidden_frac", 0.0))
+    return {
+        "predicted_io_s": float(predicted.get("t_io_s", 0.0)),
+        "measured_io_s": float(measured.get("io_busy_s", 0.0)),
+        "predicted_hidden_frac": p_hidden,
+        "measured_hidden_frac": m_hidden,
+        "hidden_frac_error": m_hidden - p_hidden,
+    }

@@ -40,6 +40,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.ckpt.checkpoint import (CheckpointManager, restore_train_state,
                                    save_train_state)
 
@@ -147,7 +148,9 @@ class TrainLoop:
         if self._opt_tx is None:
             return self.state.opt_state
         tx, self._opt_tx = self._opt_tx, None
-        opt_state = tx.fetch(0)
+        with obs.span("engine.opt_fetch", cat="engine",
+                      step=self.state.step):
+            opt_state = tx.fetch(0)
         tx.close()                  # drops the record + deletes the blob
         return opt_state
 
@@ -157,8 +160,9 @@ class TrainLoop:
         spool owns the only strong reference until the next acquire)."""
         if self.host_offload != "opt_state":
             return opt_state
-        tx = self.spool.step(f"opt{step}")
-        tx.offload(0, opt_state)
+        with obs.span("engine.opt_stage", cat="engine", step=step):
+            tx = self.spool.step(f"opt{step}")
+            tx.offload(0, opt_state)
         self._opt_tx = tx
         return None
 
@@ -199,9 +203,11 @@ class TrainLoop:
                 # rematerialization below must still run
                 break
             t0 = time.perf_counter()
-            params, opt_state, metrics = self.step_fn(
-                self.state.params, self._acquire_opt_state(), batch)
-            jax.block_until_ready(jax.tree.leaves(params)[0])
+            with obs.span("engine.step", cat="engine",
+                          step=self.state.step, engine="jit"):
+                params, opt_state, metrics = self.step_fn(
+                    self.state.params, self._acquire_opt_state(), batch)
+                jax.block_until_ready(jax.tree.leaves(params)[0])
             dt = time.perf_counter() - t0
             opt_state = self._stage_opt_state(opt_state,
                                               self.state.step + 1)

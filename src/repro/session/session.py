@@ -38,6 +38,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.ckpt.checkpoint import (CheckpointManager, restore_train_state,
                                    save_train_state)
 from repro.configs import ARCH_IDS, get_config, reduced
@@ -136,6 +137,8 @@ class TrainSession:
                  metrics_path: Optional[str] = None,
                  spool_dir: Optional[str] = None,
                  min_offload_elements: Optional[int] = None,
+                 trace: Optional[str] = None,
+                 trace_ring: int = 0,
                  install_signal_handlers: bool = False):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
@@ -177,6 +180,21 @@ class TrainSession:
         self._loop: Optional[TrainLoop] = None
         self._owned_tmpdirs: List[str] = []
         self._closed = False
+
+        # repro.obs: trace export path + whether this session installed
+        # the process tracer (and so must tear it down). The per-step
+        # snapshot state feeds _step_deltas() so metrics rows are
+        # per-step, not run-cumulative.
+        self.trace_path = trace
+        self._owns_tracer = False
+        self._tracer = None
+        if trace is not None or trace_ring:
+            self._owns_tracer = not obs.is_enabled()
+            self._tracer = obs.enable(trace_ring or obs.DEFAULT_RING_SIZE)
+        self._stats_snapshot = None
+        self._shard_snapshot: dict = {}
+        self._obs_cursor = None
+        self._counters_snapshot: dict = {}
 
         if loader is None:
             loader = ShardedLoader(
@@ -316,6 +334,43 @@ class TrainSession:
         return SessionResult(self.engine, self._state,
                              list(self.reports[start:]))
 
+    def _step_deltas(self):
+        """Per-step observability snapshot-and-diff, called once at each
+        step boundary: spool stats delta (fixes the old cumulative-in-
+        JSONL rows), per-shard HookBridge traffic delta, and the overlap
+        analysis of this step's (incremental) trace window."""
+        stats_delta = None
+        if self.spool is not None:
+            cur = self.spool.stats.snapshot()
+            prev = self._stats_snapshot
+            stats_delta = cur.sub(prev) if prev is not None else cur
+            self._stats_snapshot = cur
+        shard_delta = None
+        if self._hook_bridge is not None:
+            cur_sh = self._hook_bridge.stats_by_shard()
+            prev_sh = self._shard_snapshot
+            shard_delta = {}
+            for shard, rec in cur_sh.items():
+                prev_rec = prev_sh.get(shard, {})
+                d = {k: v - prev_rec.get(k, 0) for k, v in rec.items()}
+                if any(d.values()):
+                    name = "global" if shard is None else str(shard)
+                    shard_delta[name] = d
+            self._shard_snapshot = cur_sh
+        obs_delta = None
+        tracer = obs.get_tracer()
+        if tracer is not None:
+            from repro.obs import overlap
+            events, self._obs_cursor = tracer.snapshot_new(
+                self._obs_cursor)
+            counters = tracer.counters()
+            prev_c = self._counters_snapshot
+            delta_c = {k: v - prev_c.get(k, 0)
+                       for k, v in counters.items()}
+            self._counters_snapshot = counters
+            obs_delta = overlap.analyze(events, delta_c)
+        return stats_delta, shard_delta, obs_delta
+
     def _emit(self, rep: StepReport,
               on_report: Optional[Callable]) -> None:
         self.reports.append(rep)
@@ -357,6 +412,7 @@ class TrainSession:
                 params, opt_state, batches)
             step += 1
             rep.step = step
+            rep.stats, rep.shard_stats, rep.obs = self._step_deltas()
             tokens = sum(_batch_tokens(b) for b in batches)
             rep.tokens_per_s = tokens / rep.step_time \
                 if rep.step_time else 0.0
@@ -377,12 +433,13 @@ class TrainSession:
                     extra[k] = float(v)
                 except (TypeError, ValueError):
                     pass
+            stats_d, shard_d, obs_d = self._step_deltas()
             rep = StepReport(
                 loss=extra.get("loss", float("nan")),
                 step_time=dt, step=step, engine="jit",
-                stats=self.spool.stats if self.spool else None,
+                stats=stats_d,
                 tokens_per_s=tokens / dt if dt else 0.0,
-                extra=extra)
+                extra=extra, obs=obs_d, shard_stats=shard_d)
             self._emit(rep, on_report)
 
         if self._loop is None:
@@ -421,6 +478,15 @@ class TrainSession:
             self._ckpt.wait()
         if self._metrics_f is not None:
             self._metrics_f.close()
+        # export the trace after every engine/spool quiesced, so the
+        # timeline is complete and all spans are closed
+        if self._tracer is not None and self.trace_path:
+            from repro.obs.export import write_chrome_trace
+            write_chrome_trace(self.trace_path, self._tracer,
+                               extra={"engine": self.engine,
+                                      "arch": self.cfg.name})
+        if self._owns_tracer:
+            obs.disable()
         for d in self._owned_tmpdirs:
             shutil.rmtree(d, ignore_errors=True)
 
