@@ -1,0 +1,172 @@
+"""Paged-KV serving benchmark: paged-vs-dense A/B on the same request
+trace at equal device-cache budget, emitting ``BENCH_serve.json``.
+
+Both servers replay the identical synthetic trace (same prompts, same
+generation budgets, same slot count, same attention extent). The dense
+baseline pins one full-length cache row per slot, so its live
+concurrency is structurally capped at the slot count. The paged server
+time-slices: quantum preemption evicts a running sequence's KV pages
+through the activation spool to storage and prefetches them back under
+the other slots' decode compute — live (mid-generation) sequences then
+stack up far beyond the device working set.
+
+Reported per side: decode tok/s, slot occupancy, peak/mean live
+concurrency, TTFT and inter-token latency percentiles, device bytes,
+and page/eviction traffic. ``--check`` asserts the PR's acceptance
+claims and exits non-zero on violation:
+
+  * paged sustains >= 2x the dense baseline's concurrent sequences at
+    equal device-cache budget (up to the one reserved null page);
+  * paged decode logits are bitwise-identical to dense on the trace,
+    token for token, through eviction round trips.
+
+``--quick`` shrinks the trace for CI smoke. ``--trace`` writes a
+Perfetto trace of the run (kv.* page events over the io.* spool lanes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+import numpy as np
+
+from repro import obs
+from repro.kvcache import KVCacheConfig
+from repro.launch.serve import (build_kv_spool, build_runtime,
+                                make_server, synth_requests)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+
+
+def run_side(runtime, kind, args, spool):
+    cfg, api, params, settings = runtime
+    kvcfg = KVCacheConfig(
+        page_tokens=args.page_tokens, max_seq_len=args.cache_len,
+        quantum=args.quantum if kind == "paged" else 0,
+        prefetch_depth=args.prefetch_depth)
+    server = make_server(api, params, settings, kvcfg, kind=kind,
+                         n_slots=args.slots, spool=spool,
+                         record_logits=True)
+    synth_requests(server, args.requests, args.prompt_len,
+                   args.max_new, cfg.vocab_size, args.seed)
+    report = server.run()
+    return server, report
+
+
+def bitwise_parity(a, b) -> bool:
+    """Token ids and every sampled-from logits row, bitwise."""
+    sa = {s.rid: s for s in a.finished}
+    sb = {s.rid: s for s in b.finished}
+    if set(sa) != set(sb):
+        return False
+    for rid in sa:
+        if sa[rid].tokens != sb[rid].tokens:
+            return False
+        for x, y in zip(sa[rid].logits, sb[rid].logits):
+            if not np.array_equal(x, y):
+                return False
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="small-gpt")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--quantum", type=int, default=6)
+    ap.add_argument("--prefetch-depth", type=int, default=2)
+    ap.add_argument("--kv-backend", default="fs",
+                    choices=("fs", "aio", "mem"))
+    ap.add_argument("--kv-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--trace", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small trace for CI smoke")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the acceptance claims; exit 1 on fail")
+    args = ap.parse_args()
+    if args.quick:
+        args.slots, args.requests = 2, 8
+        args.prompt_len, args.max_new, args.cache_len = 12, 12, 32
+        args.quantum = 3
+    if args.trace:
+        obs.enable()
+
+    runtime = build_runtime(args.arch, args.seed)
+    spool, owned = build_kv_spool(args.kv_backend, args.kv_dir)
+    try:
+        paged_srv, paged = run_side(runtime, "paged", args, spool)
+        dense_srv, dense = run_side(runtime, "dense", args, None)
+    finally:
+        spool.close()
+        for d in owned:
+            shutil.rmtree(d, ignore_errors=True)
+
+    parity = bitwise_parity(paged_srv, dense_srv)
+    page_bytes = paged_srv.cache.page_bytes
+    ratios = {
+        "peak_live": paged.peak_live / max(dense.peak_live, 1),
+        "mean_live": paged.mean_live / max(dense.mean_live, 1e-9),
+        "decode_tok_s": (paged.decode_tok_s
+                         / max(dense.decode_tok_s, 1e-9)),
+        "device_bytes": paged.device_bytes / max(dense.device_bytes, 1),
+    }
+    checks = {
+        "parity_bitwise": parity,
+        # >= 2x sustained concurrent sequences at equal device budget
+        "concurrency_2x": (paged.peak_live >= 2 * dense.peak_live
+                           and paged.mean_live >= 2 * dense.mean_live),
+        # equal budget: paged may exceed dense only by the null page
+        "device_budget": (paged.device_bytes
+                          <= dense.device_bytes + page_bytes),
+        "evictions_happened": paged.kv["pages_evicted"] > 0,
+        "spool_balanced": (paged.kv["pages_evicted"]
+                           == paged.kv["pages_restored"]),
+    }
+    doc = {
+        "config": {k: getattr(args, k) for k in
+                   ("arch", "slots", "requests", "prompt_len",
+                    "max_new", "cache_len", "page_tokens", "quantum",
+                    "prefetch_depth", "kv_backend", "seed")},
+        "page_bytes": page_bytes,
+        "paged": paged.as_dict(),
+        "dense": dense.as_dict(),
+        "ratios": ratios,
+        "checks": checks,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    print(f"paged: {paged.decode_tok_s:.0f} tok/s, live peak "
+          f"{paged.peak_live} mean {paged.mean_live:.1f}, itl p99 "
+          f"{paged.itl_p99_ms:.1f}ms, {paged.kv['pages_evicted']} pages"
+          f" evicted ({paged.device_bytes >> 10} KiB device)")
+    print(f"dense: {dense.decode_tok_s:.0f} tok/s, live peak "
+          f"{dense.peak_live} mean {dense.mean_live:.1f}, itl p99 "
+          f"{dense.itl_p99_ms:.1f}ms "
+          f"({dense.device_bytes >> 10} KiB device)")
+    print(f"concurrency x{ratios['peak_live']:.1f} peak / "
+          f"x{ratios['mean_live']:.1f} mean at device-budget "
+          f"x{ratios['device_bytes']:.3f}; parity={parity}")
+    print(f"wrote {args.out}")
+    if args.trace:
+        print(f"trace -> {obs.write_chrome_trace(args.trace, obs.get_tracer())}")
+    if args.check:
+        failed = [k for k, v in checks.items() if not v]
+        if failed:
+            print(f"CHECK FAILED: {failed}", file=sys.stderr)
+            return 1
+        print("all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

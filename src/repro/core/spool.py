@@ -420,6 +420,15 @@ class ActivationSpool:
             self._active_steps.add(step_id)
         return SpoolStepTransaction(self, step_id)
 
+    def lease(self, lease_id) -> SpoolStepTransaction:
+        """Alias of `step` for non-training users. A lease is not tied
+        to a training step: the paged KV cache (repro.kvcache) opens one
+        long-lived lease per served sequence and uses logical page
+        indices as stages, so retiring the sequence (`close`) drops
+        every page it ever spooled — the same leak-proof contract, a
+        different lifetime."""
+        return self.step(lease_id)
+
     def _release_step(self, step_id: str) -> None:
         with self._lock:
             self._active_steps.discard(step_id)

@@ -1,0 +1,42 @@
+"""Paged KV-cache subsystem for serving at scale (repro.kvcache).
+
+Decouples logical sequence length from device residency: K/V lives in
+fixed-size pages in shared device pools, each sequence owns a page
+table, and cold sequences (preempted or idle) evict their pages through
+the activation spool — the same bufpool + aio/fs + byteplane data plane
+the trainer streams activations through, reused for serving. Pages of
+a sequence entering the refill horizon are prefetched back under the
+other slots' decode compute, the SSDTrain overlap argument applied to
+inference.
+
+    pages.py      page geometry, KVCacheConfig, the page allocator
+    adapters.py   paged/resident split of heterogeneous decode caches
+    manager.py    PagedKVCache (spool-backed) and DenseKVCache baseline
+    scheduler.py  continuous-batching Server with quantum preemption
+
+`build_manager` is the one-call entry the serve launcher and the bench
+use: model api + params + a KVCacheConfig in, a ready manager out.
+"""
+from __future__ import annotations
+
+from repro.kvcache.manager import DenseKVCache, KVStats, PagedKVCache
+from repro.kvcache.pages import (KVCacheConfig, PageAllocator,
+                                 PagePoolExhausted)
+from repro.kvcache.scheduler import Request, Sequence, Server, ServeReport
+
+__all__ = [
+    "KVCacheConfig", "PageAllocator", "PagePoolExhausted",
+    "PagedKVCache", "DenseKVCache", "KVStats",
+    "Server", "ServeReport", "Request", "Sequence",
+    "build_manager",
+]
+
+
+def build_manager(kind: str, api, params, settings, kvcfg: KVCacheConfig,
+                  n_slots: int, spool=None):
+    """Construct a KV-cache manager: kind in {"paged", "dense"}."""
+    if kind == "paged":
+        return PagedKVCache(api, params, settings, kvcfg, n_slots, spool)
+    if kind == "dense":
+        return DenseKVCache(api, params, settings, kvcfg, n_slots)
+    raise ValueError(f"unknown KV cache kind {kind!r}")

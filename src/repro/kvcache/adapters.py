@@ -1,0 +1,134 @@
+"""Cache-layout adapters between the model's decode caches and the
+paged KV pool (repro.kvcache).
+
+A model's decode cache is heterogeneous (models/transformer.py): dense
+full-attention K/V grows with the sequence and is *pageable*; a
+sliding-window layer's ring cache is a bounded buffer whose slot
+layout depends on absolute position; rglru/ssm carry O(1) recurrent
+state; cross-attention K/V is a fixed encoder projection. This module
+decides, per block, which side of the split a cache entry lands on:
+
+  paged    — full-attention K/V (window 0, or a window at least as
+             long as the padded cache — masking makes it full), carved
+             into fixed-size pages in a shared device pool;
+  resident — everything else, kept as per-slot dense stacks exactly
+             like the classic decode cache. Resident entries ride
+             evictions as one per-sequence state blob, so a parked
+             recurrent or windowed sequence restores bit-exactly too.
+
+It also owns the right-padding rule: bucketing a prompt up to a page
+multiple is exact only when every sequence-dependent cache entry is
+paged (causal masking hides the pad K/V). Ring slots and recurrent
+states integrate pad tokens into their state, so any arch carrying
+them prefills at the exact prompt length instead (one jit
+specialization per distinct prompt length rather than per bucket).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of
+from repro.models.transformer import SegmentDef, init_block_cache
+
+__all__ = [
+    "is_pageable", "paged_block_ids", "needs_exact_prefill",
+    "build_pools", "build_resident", "page_nbytes", "tree_nbytes",
+]
+
+
+def is_pageable(bdef, padded_seq_len: int) -> bool:
+    """Full-attention K/V pages; a window >= the padded cache length is
+    full attention in disguise (the mask never bites)."""
+    return bdef.mixer == "attn" and (
+        not bdef.window or bdef.window >= padded_seq_len)
+
+
+def paged_block_ids(segments: Tuple[SegmentDef, ...],
+                    padded_seq_len: int) -> List[set]:
+    """Per-segment set of block ids ("b0", ...) whose cache is paged."""
+    return [{f"b{i}" for i, b in enumerate(seg.blocks)
+             if is_pageable(b, padded_seq_len)}
+            for seg in segments]
+
+
+def needs_exact_prefill(segments: Tuple[SegmentDef, ...],
+                        padded_seq_len: int) -> bool:
+    """True when right-padding the prompt to a page bucket would leak
+    pad tokens into sequence state (ring caches, recurrent state)."""
+    for seg in segments:
+        for b in seg.blocks:
+            if b.mixer in ("rglru", "ssm"):
+                return True
+            if b.mixer == "attn" and not is_pageable(b, padded_seq_len):
+                return True
+    return False
+
+
+def build_pools(segments: Tuple[SegmentDef, ...], cfg: ModelConfig,
+                n_pages: int, page_tokens: int, padded_seq_len: int,
+                dtype) -> List[Dict]:
+    """Device page pools: per segment, {bid: {"k","v"}} with shape
+    (n_repeat, n_pages, page_tokens, Hkv, head_dim). Page 0 is the
+    null page (pages.py)."""
+    dtype = dtype_of(dtype) if isinstance(dtype, str) else dtype
+    hd = cfg.resolved_head_dim
+    pools: List[Dict] = []
+    for seg, ids in zip(segments,
+                        paged_block_ids(segments, padded_seq_len)):
+        entry = {}
+        for i, bdef in enumerate(seg.blocks):
+            bid = f"b{i}"
+            if bid not in ids:
+                continue
+            shape = (seg.n_repeat, n_pages, page_tokens,
+                     cfg.num_kv_heads, hd)
+            entry[bid] = {"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)}
+        pools.append(entry)
+    return pools
+
+
+def build_resident(segments: Tuple[SegmentDef, ...], cfg: ModelConfig,
+                   n_slots: int, padded_seq_len: int, dtype,
+                   paged: List[set] = None) -> List[Dict]:
+    """Per-slot dense stacks for the non-paged blocks: per segment,
+    {bid: cache_entry} with leading dim n_repeat — the exact layout
+    api.decode_step scans, just filtered down to the resident blocks.
+    Pass `paged` explicitly to override the split (the dense baseline
+    passes empty sets to keep every block resident)."""
+    dtype = dtype_of(dtype) if isinstance(dtype, str) else dtype
+    resident: List[Dict] = []
+    if paged is None:
+        paged = paged_block_ids(segments, padded_seq_len)
+    for seg, ids in zip(segments, paged):
+        entry = {}
+        for i, bdef in enumerate(seg.blocks):
+            bid = f"b{i}"
+            if bid in ids:
+                continue
+            one = init_block_cache(bdef, cfg, n_slots, padded_seq_len,
+                                   dtype)
+            entry[bid] = jax.tree.map(
+                lambda a: jnp.zeros((seg.n_repeat,) + a.shape, a.dtype),
+                one)
+        resident.append(entry)
+    return resident
+
+
+def tree_nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def page_nbytes(pools: List[Dict]) -> int:
+    """Bytes one physical page occupies across every layer's pool."""
+    total = 0
+    for entry in pools:
+        for kv in entry.values():
+            for arr in (kv["k"], kv["v"]):
+                n_repeat, _, P, H, D = arr.shape
+                total += n_repeat * P * H * D * arr.dtype.itemsize
+    return total

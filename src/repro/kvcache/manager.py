@@ -1,0 +1,499 @@
+"""KV-cache managers: the paged, spool-backed device cache and the
+dense baseline (repro.kvcache).
+
+`PagedKVCache` decouples logical sequence length from device residency:
+K/V lives in fixed-size pages in a shared device pool, each sequence
+owns a page table, and a parked (preempted/idle) sequence's pages are
+*evicted through the activation spool* — the same bufpool + aio/fs +
+byteplane data plane training activations ride, reused unchanged for
+bf16 KV pages. Every sequence holds one spool lease
+(`spool.lease(f"kv{rid}")`); pages are lease stages keyed by logical
+page index, so releasing a retired sequence drops every blob it ever
+spooled, on success and on error alike (the transactional-lease
+contract from training, reused for serving).
+
+`DenseKVCache` is the classic layout — one dense cache row per slot —
+behind the same interface, so the continuous-batching scheduler runs
+against either and the benchmark can A/B them at equal device budget.
+Both decode through jitted steps with donated cache arguments, and both
+use *identical* attention extents (`KVCacheConfig.padded_seq_len`), so
+paged and dense logits are bitwise-equal on the same request trace.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.kvcache import adapters
+from repro.kvcache.pages import KVCacheConfig, PageAllocator
+from repro.models.api import ModelApi
+from repro.models.transformer import RunSettings
+
+__all__ = ["PagedKVCache", "DenseKVCache", "KVStats"]
+
+
+@dataclass
+class KVStats:
+    """Counters the serve report and the bench surface."""
+    pages_allocated: int = 0
+    page_faults: int = 0            # decode-growth allocs (pos crossed a page)
+    pages_evicted: int = 0
+    pages_restored: int = 0
+    bytes_evicted: int = 0
+    bytes_restored: int = 0
+    evictions: int = 0              # sequence park events
+    restores: int = 0               # sequence un-park events
+    prefills: int = 0
+    hot_binds: int = 0              # slot refills that needed no spool I/O
+
+    def as_dict(self) -> Dict[str, int]:
+        import dataclasses as _dc
+        return _dc.asdict(self)
+
+
+def _align_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+class _ManagerBase:
+    """Shared slot bookkeeping: per-slot position / last-token arrays
+    and the prompt-bucketing rule (kept identical between paged and
+    dense so both run the very same prefill forward)."""
+
+    def __init__(self, api: ModelApi, params, settings: RunSettings,
+                 kvcfg: KVCacheConfig, n_slots: int):
+        self.api = api
+        self.cfg = api.cfg
+        self.params = params
+        self.settings = settings
+        self.kvcfg = kvcfg.validate()
+        self.n_slots = n_slots
+        self.P = kvcfg.page_tokens
+        self.S = kvcfg.padded_seq_len
+        self.max_pages = kvcfg.max_pages
+        self.exact_prefill = adapters.needs_exact_prefill(
+            api.segments, self.S)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self.stats = KVStats()
+        self._start_fns: Dict[int, Any] = {}
+
+    def bind_token(self, seq, token: int) -> None:
+        """Stage the first sampled token (from prefill logits) as the
+        slot's next decode input — no position bump: the token's K/V is
+        written by the decode step that consumes it."""
+        seq.last_tok = token
+        self.last_tok[seq.slot] = token
+
+    def bucket_for(self, plen: int) -> int:
+        """Prefill length for a prompt: page-aligned right padding when
+        every sequence state is paged (pad K/V is masked), the exact
+        length when ring/recurrent state would integrate pad tokens."""
+        return plen if self.exact_prefill else _align_up(plen, self.P)
+
+    def _pad_prompt(self, prompt: np.ndarray, bucket: int) -> jnp.ndarray:
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :len(prompt)] = prompt
+        return jnp.asarray(toks)
+
+
+# ======================================================================
+# Paged manager
+# ======================================================================
+
+class PagedKVCache(_ManagerBase):
+    kind = "paged"
+    can_evict = True
+
+    def __init__(self, api: ModelApi, params, settings: RunSettings,
+                 kvcfg: KVCacheConfig, n_slots: int, spool):
+        super().__init__(api, params, settings, kvcfg, n_slots)
+        if spool is None:
+            raise ValueError("PagedKVCache needs a spool for eviction")
+        self.spool = spool
+        self.n_pool_pages = kvcfg.resolve_pool_pages(n_slots)
+        self.alloc = PageAllocator(self.n_pool_pages)
+        self.paged_ids = adapters.paged_block_ids(api.segments, self.S)
+        if not any(self.paged_ids):
+            raise ValueError(
+                f"{self.cfg.name}: no pageable (full-attention) cache "
+                "entries — a paged pool would hold nothing")
+        self.pools = adapters.build_pools(
+            api.segments, self.cfg, self.n_pool_pages, self.P, self.S,
+            kvcfg.dtype)
+        self.resident = adapters.build_resident(
+            api.segments, self.cfg, n_slots, self.S, kvcfg.dtype)
+        self.page_bytes = adapters.page_nbytes(self.pools)
+        self.tables = np.zeros((n_slots, self.max_pages), np.int32)
+        self._decode_fn = jax.jit(
+            lambda params, pools, resident, tables, tokens, pos:
+                api.decode_step_paged(params, pools, resident, tables,
+                                      {"tokens": tokens}, pos, settings),
+            donate_argnums=(1, 2))
+        self._scatter_fns: Dict[Any, Any] = {}
+        self._res_write_fns: Dict[Any, Any] = {}
+
+    @property
+    def device_bytes(self) -> int:
+        return (adapters.tree_nbytes(self.pools)
+                + adapters.tree_nbytes(self.resident))
+
+    # ------------------------------------------------------- decode
+
+    def decode(self) -> np.ndarray:
+        """One decode step for every slot; returns (B, V) f32 logits.
+        Idle slots decode a dummy token into the null page."""
+        logits, self.pools, self.resident = self._decode_fn(
+            self.params, self.pools, self.resident,
+            jnp.asarray(self.tables), jnp.asarray(self.last_tok[:, None]),
+            jnp.asarray(self.pos))
+        return np.asarray(logits[:, 0])
+
+    def advance(self, seq, token: int) -> None:
+        """Record the sampled token; the slot writes it next step."""
+        seq.pos += 1
+        seq.last_tok = token
+        self.pos[seq.slot] = seq.pos
+        self.last_tok[seq.slot] = token
+
+    def fault_in(self, seq) -> None:
+        """Make sure the page holding position seq.pos exists before
+        the decode step writes into it."""
+        needed = seq.pos // self.P + 1
+        if needed <= len(seq.pages):
+            return
+        grow = needed - len(seq.pages)
+        ids = self.alloc.alloc(grow)
+        for k, pid in enumerate(ids):
+            self.tables[seq.slot, len(seq.pages) + k] = pid
+        seq.pages.extend(ids)
+        self.stats.pages_allocated += grow
+        self.stats.page_faults += grow
+        obs.instant("kv.alloc", cat="kv", seq=seq.rid, pages=grow,
+                    fault=True)
+        obs.gauge("kv.pages_in_use", self.alloc.in_use)
+
+    # ------------------------------------------------------- lifecycle
+
+    def start(self, seq, slot: int) -> np.ndarray:
+        """Prefill a new sequence into pages bound to `slot`; returns
+        the (V,) logits row at the last prompt position."""
+        plen = len(seq.prompt)
+        bucket = self.bucket_for(plen)
+        n_pages = max(1, -(-bucket // self.P))
+        ids = self.alloc.alloc(n_pages)
+        seq.tx = self.spool.lease(f"kv{seq.rid}")
+        with obs.span("kv.prefill", cat="kv", seq=seq.rid,
+                      tokens=plen, pages=n_pages):
+            row, self.pools, self.resident = self._start_fn(bucket)(
+                self.params, self._pad_prompt(seq.prompt, bucket),
+                self.pools, self.resident, jnp.asarray(ids, jnp.int32),
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(plen - 1, jnp.int32))
+            row = np.asarray(row)
+        seq.pages = list(ids)
+        seq.slot = slot
+        seq.pos = plen
+        self.tables[slot] = 0
+        self.tables[slot, :n_pages] = ids
+        self.pos[slot] = plen
+        self.stats.pages_allocated += n_pages
+        self.stats.prefills += 1
+        obs.instant("kv.alloc", cat="kv", seq=seq.rid, pages=n_pages)
+        obs.gauge("kv.pages_in_use", self.alloc.in_use)
+        return row
+
+    def evict(self, seq) -> None:
+        """Park a slot-resident sequence: stream its pages (and any
+        resident recurrent/ring state) to the spool, free the device
+        pages, unbind the slot. The spool writes are async — decode of
+        the other slots keeps running while the pages drain."""
+        assert seq.slot is not None and seq.pages is not None
+        n = len(seq.pages)
+        with obs.span("kv.evict", cat="kv", seq=seq.rid, pages=n):
+            ids = jnp.asarray(seq.pages)
+            host: List = []
+            for seg_i, entry in enumerate(self.pools):
+                for bid, kv in entry.items():
+                    host.append((f"{seg_i}.{bid}", {
+                        "k": np.asarray(kv["k"][:, ids]),
+                        "v": np.asarray(kv["v"][:, ids])}))
+            nbytes = 0
+            for j in range(n):
+                blob = {name: {"k": kv["k"][:, j], "v": kv["v"][:, j]}
+                        for name, kv in host}
+                nbytes += sum(a.nbytes for a in jax.tree.leaves(blob))
+                seq.tx.offload(j, blob)
+            st = {}
+            for seg_i, entry in enumerate(self.resident):
+                for bid, tree in entry.items():
+                    st[f"{seg_i}.{bid}"] = jax.tree.map(
+                        lambda a: np.asarray(a[:, seq.slot]), tree)
+            if st:
+                nbytes += sum(a.nbytes for a in jax.tree.leaves(st))
+                seq.tx.offload("st", st)
+        self.alloc.free(seq.pages)
+        self._unbind(seq)
+        seq.n_pages = n
+        seq.pages = None
+        self.stats.pages_evicted += n
+        self.stats.bytes_evicted += nbytes
+        self.stats.evictions += 1
+        obs.instant("kv.evicted", cat="kv", seq=seq.rid, pages=n,
+                    bytes=nbytes)
+        obs.gauge("kv.pages_in_use", self.alloc.in_use)
+
+    def prefetch(self, seq) -> None:
+        """Hint async loads for a parked sequence's pages — issued when
+        it enters the refill horizon, so the blobs stream back from the
+        spool while other slots keep decoding."""
+        if seq.pages is not None or seq.tx is None:
+            return
+        for j in range(seq.n_pages):
+            seq.tx.prefetch(j)
+        if seq.tx.has_stage("st"):
+            seq.tx.prefetch("st")
+        obs.instant("kv.prefetch", cat="kv", seq=seq.rid,
+                    pages=seq.n_pages)
+
+    def restore(self, seq, slot: int) -> None:
+        """Un-park a sequence into `slot`: fetch its pages from the
+        spool (prefetch hits make this a forwarding, not a read) and
+        scatter them into freshly allocated device pages."""
+        assert seq.pages is None
+        n = seq.n_pages
+        with obs.span("kv.restore", cat="kv", seq=seq.rid, pages=n):
+            ids = self.alloc.alloc(n)
+            nbytes = 0
+            for j, pid in enumerate(ids):
+                blob = seq.tx.consume(j, to_device=False)
+                nbytes += sum(a.nbytes for a in jax.tree.leaves(blob))
+                pid_ = jnp.asarray(pid, jnp.int32)
+                for seg_i, entry in enumerate(self.pools):
+                    for bid in entry:
+                        page = blob[f"{seg_i}.{bid}"]
+                        entry[bid] = self._scatter(seg_i, bid)(
+                            entry[bid], pid_,
+                            {"k": jnp.asarray(page["k"]),
+                             "v": jnp.asarray(page["v"])})
+            if seq.tx.has_stage("st"):
+                st = seq.tx.consume("st", to_device=False)
+                nbytes += sum(a.nbytes for a in jax.tree.leaves(st))
+                slot_ = jnp.asarray(slot, jnp.int32)
+                for seg_i, entry in enumerate(self.resident):
+                    for bid in entry:
+                        rows = jax.tree.map(jnp.asarray,
+                                            st[f"{seg_i}.{bid}"])
+                        entry[bid] = self._res_write(seg_i, bid)(
+                            entry[bid], slot_, rows)
+        seq.pages = ids
+        seq.slot = slot
+        self.tables[slot] = 0
+        self.tables[slot, :n] = ids
+        self.pos[slot] = seq.pos
+        self.last_tok[slot] = seq.last_tok
+        self.stats.pages_allocated += n
+        self.stats.pages_restored += n
+        self.stats.bytes_restored += nbytes
+        self.stats.restores += 1
+        obs.instant("kv.restored", cat="kv", seq=seq.rid, pages=n,
+                    bytes=nbytes)
+        obs.gauge("kv.pages_in_use", self.alloc.in_use)
+
+    def release(self, seq) -> None:
+        """Retire a sequence: free device pages if resident, drop every
+        spooled blob via the lease's close (leak-proof by contract)."""
+        if seq.pages is not None:
+            self.alloc.free(seq.pages)
+            if seq.slot is not None:
+                self._unbind(seq)
+            seq.pages = None
+        if seq.tx is not None:
+            seq.tx.close()
+            seq.tx = None
+        obs.gauge("kv.pages_in_use", self.alloc.in_use)
+
+    def _unbind(self, seq) -> None:
+        self.tables[seq.slot] = 0
+        self.pos[seq.slot] = 0
+        self.last_tok[seq.slot] = 0
+        seq.slot = None
+
+    # ------------------------------------------------------- jit cache
+
+    def _start_fn(self, bucket: int):
+        fn = self._start_fns.get(bucket)
+        if fn is not None:
+            return fn
+        P, S = self.P, self.S
+        n_pages = max(1, -(-bucket // P))
+        pad = n_pages * P - bucket
+        api, settings = self.api, self.settings
+
+        def start(params, toks, pools, resident, ids, slot, lpos):
+            logits, caches, _ = api.forward(
+                params, {"tokens": toks}, settings, emit_cache=True,
+                cache_len=S)
+            new_pools, new_res = [], []
+            for seg_i, entry in enumerate(pools):
+                ne = {}
+                for bid, kv in entry.items():
+                    ce = caches[seg_i][bid]
+
+                    def pages_of(a):
+                        a = a[:, 0, :bucket]
+                        if pad:
+                            a = jnp.pad(a, [(0, 0), (0, pad),
+                                            (0, 0), (0, 0)])
+                        return a.reshape(a.shape[0], n_pages, P,
+                                         *a.shape[2:])
+
+                    ne[bid] = {
+                        "k": kv["k"].at[:, ids].set(pages_of(ce["k"])),
+                        "v": kv["v"].at[:, ids].set(pages_of(ce["v"])),
+                    }
+                new_pools.append(ne)
+            for seg_i, entry in enumerate(resident):
+                ne = {}
+                for bid, tree in entry.items():
+                    ce = caches[seg_i][bid]
+                    ne[bid] = jax.tree.map(
+                        lambda r, x: r.at[:, slot].set(x[:, 0]),
+                        tree, ce)
+                new_res.append(ne)
+            return logits[0, lpos], new_pools, new_res
+
+        fn = jax.jit(start, donate_argnums=(2, 3))
+        self._start_fns[bucket] = fn
+        return fn
+
+    def _scatter(self, seg_i: int, bid: str):
+        key = (seg_i, bid)
+        fn = self._scatter_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda kv, pid, page: {
+                    "k": kv["k"].at[:, pid].set(page["k"]),
+                    "v": kv["v"].at[:, pid].set(page["v"])},
+                donate_argnums=(0,))
+            self._scatter_fns[key] = fn
+        return fn
+
+    def _res_write(self, seg_i: int, bid: str):
+        key = (seg_i, bid)
+        fn = self._res_write_fns.get(key)
+        if fn is None:
+            fn = jax.jit(
+                lambda tree, slot, rows: jax.tree.map(
+                    lambda r, x: r.at[:, slot].set(x), tree, rows),
+                donate_argnums=(0,))
+            self._res_write_fns[key] = fn
+        return fn
+
+
+# ======================================================================
+# Dense baseline
+# ======================================================================
+
+class DenseKVCache(_ManagerBase):
+    """The classic dense layout: every slot owns full-length cache rows
+    (`padded_seq_len`, matching the paged attention extent bitwise).
+    No eviction — a live sequence pins its slot until retirement, so
+    concurrency is capped at the slot count. This is the baseline the
+    bench holds at equal device bytes."""
+
+    kind = "dense"
+    can_evict = False
+
+    def __init__(self, api: ModelApi, params, settings: RunSettings,
+                 kvcfg: KVCacheConfig, n_slots: int, spool=None):
+        super().__init__(api, params, settings, kvcfg, n_slots)
+        empty = [set() for _ in api.segments]
+        self.caches = adapters.build_resident(
+            api.segments, self.cfg, n_slots, self.S, kvcfg.dtype,
+            paged=empty)
+        self._decode_fn = jax.jit(
+            lambda params, caches, tokens, pos:
+                api.decode_step(params, caches, {"tokens": tokens}, pos,
+                                settings),
+            donate_argnums=(1,))
+
+    @property
+    def device_bytes(self) -> int:
+        return adapters.tree_nbytes(self.caches)
+
+    def decode(self) -> np.ndarray:
+        logits, self.caches = self._decode_fn(
+            self.params, self.caches,
+            jnp.asarray(self.last_tok[:, None]), jnp.asarray(self.pos))
+        return np.asarray(logits[:, 0])
+
+    def advance(self, seq, token: int) -> None:
+        seq.pos += 1
+        seq.last_tok = token
+        self.pos[seq.slot] = seq.pos
+        self.last_tok[seq.slot] = token
+
+    def fault_in(self, seq) -> None:   # dense rows never fault
+        pass
+
+    def start(self, seq, slot: int) -> np.ndarray:
+        plen = len(seq.prompt)
+        bucket = self.bucket_for(plen)
+        with obs.span("kv.prefill", cat="kv", seq=seq.rid, tokens=plen):
+            row, self.caches = self._start_fn(bucket)(
+                self.params, self._pad_prompt(seq.prompt, bucket),
+                self.caches, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(plen - 1, jnp.int32))
+            row = np.asarray(row)
+        seq.slot = slot
+        seq.pos = plen
+        self.pos[slot] = plen
+        self.stats.prefills += 1
+        return row
+
+    def evict(self, seq) -> None:
+        raise RuntimeError("dense KV cache cannot evict — sequences pin "
+                           "their slot until retirement")
+
+    def prefetch(self, seq) -> None:
+        pass
+
+    def restore(self, seq, slot: int) -> None:
+        raise RuntimeError("dense KV cache has nothing to restore")
+
+    def release(self, seq) -> None:
+        if seq.slot is not None:
+            self.pos[seq.slot] = 0
+            self.last_tok[seq.slot] = 0
+            seq.slot = None
+
+    def _start_fn(self, bucket: int):
+        fn = self._start_fns.get(bucket)
+        if fn is not None:
+            return fn
+        api, settings, S = self.api, self.settings, self.S
+
+        def start(params, toks, caches, slot, lpos):
+            logits, pre, _ = api.forward(
+                params, {"tokens": toks}, settings, emit_cache=True,
+                cache_len=S)
+            new = []
+            for seg_i, entry in enumerate(caches):
+                ne = {}
+                for bid, tree in entry.items():
+                    ne[bid] = jax.tree.map(
+                        lambda r, x: r.at[:, slot].set(x[:, 0]),
+                        tree, pre[seg_i][bid])
+                new.append(ne)
+            return logits[0, lpos], new
+
+        fn = jax.jit(start, donate_argnums=(2,))
+        self._start_fns[bucket] = fn
+        return fn

@@ -1,0 +1,137 @@
+"""Paged KV-cache primitives: page geometry and the device page
+allocator (repro.kvcache).
+
+A *page* holds `page_tokens` consecutive tokens of one sequence's K/V
+across every pageable layer (the pool arrays carry the layer dimension,
+so one page id addresses the same page slot in every layer's pool —
+allocating a page allocates it for the whole layer stack at once, the
+blob the spool sees on eviction).
+
+Physical page 0 is the reserved *null page*: idle decode slots (and
+table entries past a sequence's allocated length) point at it, so the
+jitted decode step never needs a batch-size-dependent branch — inactive
+rows scribble their dummy token into page 0 and nobody ever attends to
+it (a live sequence's table never contains 0).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+__all__ = ["KVCacheConfig", "PageAllocator", "PagePoolExhausted"]
+
+
+class PagePoolExhausted(RuntimeError):
+    """The device page pool has no free pages left.
+
+    Raised on a page fault (an actively-decoding slot crossing a page
+    boundary) that cannot be satisfied. With the default sizing
+    (`pool_pages = n_slots * max_pages + 1`) this cannot happen; it
+    can when `pool_pages` is set tighter than the worst case."""
+
+
+@dataclass(frozen=True)
+class KVCacheConfig:
+    """Knobs of the paged KV-cache subsystem.
+
+    page_tokens:    tokens per KV page (per layer). Smaller pages waste
+                    less pool on short prompts but mean more spool
+                    records per eviction.
+    pool_pages:     device page-pool size, *including* the reserved
+                    null page. 0 -> sized to the worst case,
+                    n_slots * max_pages + 1, so active slots can never
+                    fault against an exhausted pool.
+    max_seq_len:    logical sequence-length cap (prompt + generation).
+                    Rounded up to a page multiple; this is also the
+                    dense baseline's per-slot cache length, so paged
+                    and dense decode see identically-shaped attention.
+    prefetch_depth: how many next-up parked sequences get their pages
+                    prefetched from the spool while other slots keep
+                    decoding (the ISSUE's prefetch-on-slot-refill).
+    quantum:        decode tokens a sequence may run before the
+                    scheduler preempts it for waiting work (0 = run to
+                    retirement; preemption is what turns spare spool
+                    capacity into extra live sequences).
+    max_live:       admission cap on concurrently live (mid-generation)
+                    sequences. 0 = unbounded for the paged cache;
+                    the dense cache is always capped at its slot count.
+    dtype:          KV pool dtype (the spool's byteplane codec applies
+                    to bf16 pages unchanged).
+    """
+    page_tokens: int = 16
+    pool_pages: int = 0
+    max_seq_len: int = 256
+    prefetch_depth: int = 2
+    quantum: int = 0
+    max_live: int = 0
+    dtype: str = "bfloat16"
+
+    @property
+    def max_pages(self) -> int:
+        return -(-self.max_seq_len // self.page_tokens)
+
+    @property
+    def padded_seq_len(self) -> int:
+        """max_seq_len rounded up to a whole number of pages — the
+        gathered attention extent, and the dense baseline's cache
+        length (kept equal for bitwise parity)."""
+        return self.max_pages * self.page_tokens
+
+    def resolve_pool_pages(self, n_slots: int) -> int:
+        if self.pool_pages:
+            return self.pool_pages
+        return n_slots * self.max_pages + 1
+
+    def validate(self) -> "KVCacheConfig":
+        assert self.page_tokens > 0, self.page_tokens
+        assert self.max_seq_len >= self.page_tokens, \
+            (self.max_seq_len, self.page_tokens)
+        assert self.prefetch_depth >= 0
+        assert self.quantum >= 0
+        assert self.max_live >= 0
+        if self.pool_pages:
+            assert self.pool_pages >= 2, "need >= 1 page beyond the null"
+        return self
+
+
+class PageAllocator:
+    """Free-list allocator over physical page ids [1, n_pages).
+
+    Deterministic: freed pages are recycled LIFO, fresh pages are
+    handed out in ascending id order — the same request trace always
+    produces the same physical placement (the scheduler-determinism
+    tests rely on this)."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "pool needs the null page plus one"
+        self.n_pages = n_pages
+        # pop() yields ascending ids for a fresh pool
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.allocated = 0          # lifetime allocs
+        self.freed = 0
+        self.high_water = 0
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"need {n} pages, {len(self._free)} free of "
+                f"{self.n_pages - 1} (raise pool_pages or lower "
+                f"max_live/quantum pressure)")
+        out = [self._free.pop() for _ in range(n)]
+        self.allocated += n
+        self.high_water = max(self.high_water, self.in_use)
+        return out
+
+    def free(self, ids: List[int]) -> None:
+        for pid in ids:
+            assert 0 < pid < self.n_pages, pid
+            self._free.append(pid)
+        self.freed += len(ids)

@@ -1,133 +1,180 @@
-"""Batched serving driver (deliverable b): prefill + decode with
-continuous batching over a synthetic request queue.
+"""Serving driver: continuous batching over a paged (or dense) KV
+cache (repro.kvcache).
 
-Requests arrive with varying prompt lengths and generation budgets; the
-server right-pads prompts per prefill batch, then decodes the whole batch
-one token per step against the ring/linear caches, retiring finished
-sequences and refilling slots from the queue (continuous batching).
-Reports prefill tokens/s, decode tokens/s, and per-request latency.
+Slots turn over individually — a retiring sequence's slot refills from
+the resume/new queues the same step, while the other slots keep
+decoding. With `--cache paged` the KV lives in fixed-size device pages;
+parked sequences (quantum preemption, `--quantum`) evict their pages
+through the activation spool to SSD and prefetch them back under the
+other slots' decode compute, so live sequences can exceed the device
+slot count. `--cache dense` is the classic per-slot dense layout at the
+same attention extent — same logits bitwise, concurrency capped at the
+slot count.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b:reduced \
       --requests 32 --batch 8 --max-new 32
+  PYTHONPATH=src python -m repro.launch.serve --arch small-gpt \
+      --cache paged --quantum 8 --trace serve.trace.json
+
+The old driver (batch-at-a-time, decode the whole batch to completion)
+had a dead `while queue or done is None` loop clause and two
+accounting skews — the first sampled token of every request was
+dropped from the token counts and idle padding slots were billed as
+decode work; the scheduler fixes all three (repro.kvcache.scheduler).
 """
 from __future__ import annotations
 
 import argparse
-import time
-from dataclasses import dataclass, field
-from typing import List, Optional
+import json
+import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.configs.base import SpoolIoConfig
+from repro.core.spool import build_spool
+from repro.kvcache import KVCacheConfig, Server, build_manager
 from repro.launch.train import resolve_config
 from repro.models.api import build_model
 from repro.models.transformer import RunSettings
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray
-    max_new: int
-    t_enqueue: float = 0.0
-    t_first: Optional[float] = None
-    t_done: Optional[float] = None
-    out: List[int] = field(default_factory=list)
+def build_runtime(arch: str, seed: int = 0):
+    """Model api + initialized params + decode settings for an arch."""
+    cfg = resolve_config(arch)
+    if not cfg.has_decode:
+        raise SystemExit("encoder-only arch has no decode step")
+    api = build_model(cfg)
+    settings = RunSettings(attn_impl="xla", attn_chunk=256,
+                           param_dtype=cfg.dtype)
+    params = api.init(jax.random.key(seed))
+    return cfg, api, params, settings
+
+
+def build_kv_spool(backend: str = "fs", directory=None,
+                   codec: str = "byteplane"):
+    """A spool for KV pages: same data plane as training activations
+    (bufpool + aio/fs + byteplane), but with the small-tensor bypass off
+    — KV pages are small and must actually hit storage. Returns
+    (spool, owned_tmpdirs)."""
+    io_cfg = SpoolIoConfig(backend=backend, directory=directory,
+                           codec=codec)
+    return build_spool(io_cfg, min_offload_elements=0)
+
+
+def synth_requests(server: Server, n: int, prompt_len: int,
+                   max_new: int, vocab: int, seed: int) -> None:
+    """Submit the synthetic trace: variable prompt lengths in
+    [prompt_len//2, prompt_len], fixed generation budget. Deterministic
+    in the seed — the parity tests replay the same trace paged vs
+    dense."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        server.submit(rng.integers(0, vocab, plen), max_new)
+
+
+def make_server(api, params, settings, kvcfg: KVCacheConfig, *,
+                kind: str = "paged", n_slots: int = 8, spool=None,
+                record_logits: bool = False) -> Server:
+    cache = build_manager(kind, api, params, settings, kvcfg, n_slots,
+                          spool)
+    return Server(cache, record_logits=record_logits)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b:reduced")
     ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slots")
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--cache-len", type=int, default=128,
+                    help="max logical sequence length (prompt + gen)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache", choices=("paged", "dense"),
+                    default="paged")
+    ap.add_argument("--page-tokens", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="device page-pool size (0: worst-case sizing)")
+    ap.add_argument("--quantum", type=int, default=0,
+                    help="decode tokens before preemption (0: run to "
+                         "retirement)")
+    ap.add_argument("--max-live", type=int, default=0,
+                    help="admission cap on live sequences (0: none)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="parked sequences prefetched ahead of refill")
+    ap.add_argument("--kv-backend", default="fs",
+                    choices=("fs", "aio", "mem"),
+                    help="spool storage for evicted pages")
+    ap.add_argument("--kv-dir", default=None,
+                    help="spool directory (default: fresh temp dir)")
+    ap.add_argument("--kv-codec", default="byteplane",
+                    choices=("raw", "zlib", "byteplane"))
+    ap.add_argument("--trace", default=None,
+                    help="write a Perfetto trace (kv.* page events, "
+                         "serve.* scheduling, io.* spool lanes)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the serve report as JSON")
     args = ap.parse_args()
 
-    cfg = resolve_config(args.arch)
-    if not cfg.has_decode:
-        raise SystemExit("encoder-only arch has no decode step")
-    api = build_model(cfg)
-    settings = RunSettings(attn_impl="xla", attn_chunk=256,
-                           param_dtype=cfg.dtype)
-    params = api.init(jax.random.key(args.seed))
-    rng = np.random.default_rng(args.seed)
+    if args.trace:
+        obs.enable()
+    cfg, api, params, settings = build_runtime(args.arch, args.seed)
+    kvcfg = KVCacheConfig(
+        page_tokens=args.page_tokens, pool_pages=args.pool_pages,
+        max_seq_len=args.cache_len, prefetch_depth=args.prefetch_depth,
+        quantum=args.quantum, max_live=args.max_live)
 
-    S = args.cache_len
-    B = args.batch
+    spool = None
+    owned = []
+    if args.cache == "paged":
+        spool, owned = build_kv_spool(args.kv_backend, args.kv_dir,
+                                      args.kv_codec)
+    try:
+        server = make_server(api, params, settings, kvcfg,
+                             kind=args.cache, n_slots=args.batch,
+                             spool=spool)
+        synth_requests(server, args.requests, args.prompt_len,
+                       args.max_new, cfg.vocab_size, args.seed)
+        report = server.run()
+    finally:
+        if spool is not None:
+            spool.close()
+        for d in owned:
+            shutil.rmtree(d, ignore_errors=True)
 
-    @jax.jit
-    def prefill(params, tokens):
-        return api.prefill(params, {"tokens": tokens}, settings,
-                           cache_len=S)
-
-    @jax.jit
-    def decode(params, cache, tokens, pos):
-        return api.decode_step(params, cache, {"tokens": tokens}, pos,
-                               settings)
-
-    # synthetic queue with variable prompt lengths
-    queue = [Request(i,
-                     rng.integers(0, cfg.vocab_size,
-                                  rng.integers(args.prompt_len // 2,
-                                               args.prompt_len + 1)),
-                     args.max_new, time.perf_counter())
-             for i in range(args.requests)]
-    done: List[Request] = []
-    prefill_tokens = decode_tokens = 0
-    t_start = time.perf_counter()
-
-    while queue or done is None:
-        batch_reqs = queue[:B]
-        queue = queue[B:]
-        if not batch_reqs:
-            break
-        # right-align prompts into a common length (left-pad with 0)
-        plen = max(len(r.prompt) for r in batch_reqs)
-        toks = np.zeros((len(batch_reqs), plen), np.int32)
-        for i, r in enumerate(batch_reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt
-        pad = np.zeros((B - len(batch_reqs), plen), np.int32)
-        toks_b = np.concatenate([toks, pad], 0)
-
-        last_logits, cache = prefill(params, jnp.asarray(toks_b))
-        prefill_tokens += toks.size
-        nxt = jnp.argmax(last_logits[:, 0], axis=-1).astype(jnp.int32)
-        for i, r in enumerate(batch_reqs):
-            r.t_first = time.perf_counter()
-            r.out.append(int(nxt[i]))
-
-        # continuous decode for this batch
-        max_new = max(r.max_new for r in batch_reqs)
-        pos = plen
-        for step in range(max_new - 1):
-            logits, cache = decode(params, cache, nxt[:, None],
-                                   jnp.asarray(pos, jnp.int32))
-            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-            pos += 1
-            for i, r in enumerate(batch_reqs):
-                if len(r.out) < r.max_new:
-                    r.out.append(int(nxt[i]))
-                    decode_tokens += 1
-        for r in batch_reqs:
-            r.t_done = time.perf_counter()
-            done.append(r)
-
-    dt = time.perf_counter() - t_start
-    lat = [r.t_done - r.t_enqueue for r in done]
-    ttft = [r.t_first - r.t_enqueue for r in done]
-    print(f"served {len(done)} requests in {dt:.2f}s")
-    print(f"prefill: {prefill_tokens} tokens "
-          f"({prefill_tokens/dt:.0f} tok/s overall)")
-    print(f"decode:  {decode_tokens} tokens "
-          f"({decode_tokens/dt:.0f} tok/s overall)")
-    print(f"latency p50 {np.percentile(lat, 50):.2f}s "
-          f"p95 {np.percentile(lat, 95):.2f}s; "
-          f"ttft p50 {np.percentile(ttft, 50):.2f}s")
+    r = report
+    print(f"served {r.requests} requests on {r.n_slots} slots "
+          f"({r.cache_kind} cache) in {r.wall_time_s:.2f}s")
+    print(f"prefill: {r.prompt_tokens} prompt tokens; "
+          f"generated: {r.generated_tokens} tokens "
+          f"({r.gen_tok_s:.0f} tok/s overall)")
+    print(f"decode:  {r.decode_slot_tokens} slot-tokens over "
+          f"{r.decode_steps} steps ({r.decode_tok_s:.0f} tok/s, "
+          f"occupancy {r.slot_occupancy:.2f})")
+    print(f"live:    peak {r.peak_live} mean {r.mean_live:.1f} "
+          f"(preemptions {r.preemptions})")
+    print(f"latency: ttft p50 {r.ttft_p50_ms:.1f}ms "
+          f"p99 {r.ttft_p99_ms:.1f}ms; inter-token p50 "
+          f"{r.itl_p50_ms:.1f}ms p95 {r.itl_p95_ms:.1f}ms "
+          f"p99 {r.itl_p99_ms:.1f}ms")
+    if r.kv.get("evictions") or r.kv.get("pages_allocated"):
+        print(f"kv:      {r.kv['pages_allocated']} pages allocated, "
+              f"{r.kv['pages_evicted']} evicted / "
+              f"{r.kv['pages_restored']} restored "
+              f"({r.kv['evictions']} evictions, "
+              f"{r.kv['restores']} restores)")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report.as_dict(), f, indent=2, sort_keys=True)
+        print(f"report -> {args.json_out}")
+    if args.trace:
+        path = obs.write_chrome_trace(args.trace, obs.get_tracer())
+        print(f"trace -> {path}")
 
 
 if __name__ == "__main__":

@@ -30,6 +30,7 @@ from repro.models.layers import (dtype_of, embed_init, hint, init_norm,
                                  rms_norm, softcap)
 from repro.models.transformer import (BlockDef, RunSettings, SegmentDef,
                                       apply_block, apply_block_decode,
+                                      apply_block_decode_paged,
                                       build_segments, init_block, init_cache,
                                       remat_policy)
 
@@ -49,6 +50,7 @@ class ModelApi:
     loss: Callable
     prefill: Callable
     decode_step: Callable
+    decode_step_paged: Callable
     input_specs: Callable
     init_cache: Callable
 
@@ -374,10 +376,8 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         logits, _ = out
         return logits[:, -1:], None
 
-    def decode_step(params, cache, batch, pos, settings: RunSettings):
-        """One token for the whole batch. batch: {"tokens": (B, 1)} (or
-        {"embeddings"}). pos: scalar int32 position of this token."""
-        enc_states = None  # cross K/V live in the cache during decode
+    def _decode_embed(params, batch, pos, settings: RunSettings):
+        """Embed one decode token per row. pos: scalar or (B,) int32."""
         if cfg.input_kind == "embeddings":
             x = batch["embeddings"].astype(dtype_of(settings.param_dtype))
             x = jnp.einsum("bsd,de->bse", x, params["frontend_proj"])
@@ -386,9 +386,21 @@ def build_model(cfg: ModelConfig) -> ModelApi:
         if cfg.scale_embed:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
         if not cfg.use_rope:
-            x = x + jax.lax.dynamic_slice_in_dim(
-                params["pos_embed"], pos, 1, axis=0)[None].astype(x.dtype)
+            pos = jnp.asarray(pos)
+            if pos.ndim == 1:           # per-row positions: (B, 1, D)
+                x = x + params["pos_embed"][pos][:, None].astype(x.dtype)
+            else:
+                x = x + jax.lax.dynamic_slice_in_dim(
+                    params["pos_embed"], pos, 1,
+                    axis=0)[None].astype(x.dtype)
+        return x
 
+    def decode_step(params, cache, batch, pos, settings: RunSettings):
+        """One token for the whole batch. batch: {"tokens": (B, 1)} (or
+        {"embeddings"}). pos: scalar int32 position of this token, or a
+        (B,) int32 vector of per-row positions (continuous batching:
+        each serving slot decodes its own sequence)."""
+        x = _decode_embed(params, batch, pos, settings)
         new_caches = []
         for seg, p_stack, c_stack in zip(segs, params["segments"], cache):
             def body(x1, inp, seg=seg):
@@ -404,6 +416,47 @@ def build_model(cfg: ModelConfig) -> ModelApi:
             new_caches.append(nc_stack)
         logits = _head(params, x, cfg, settings)
         return logits, new_caches
+
+    def decode_step_paged(params, pools, resident, tables, batch, pos,
+                          settings: RunSettings):
+        """One token per serving slot against a paged KV cache
+        (repro.kvcache). Layers whose cache is pageable (full-attention)
+        read/write the shared device page pools through each row's page
+        table; the rest (ring attention, rglru/ssm state, cross K/V)
+        keep per-slot dense entries in `resident`.
+
+          pools:    per-segment {f"b{i}": {"k","v"}} page-pool stacks,
+                    leading dim n_repeat, only for paged blocks.
+          resident: per-segment {f"b{i}": cache} stacks for the rest.
+          tables:   (B, max_pages) int32 physical page table per row.
+          pos:      (B,) int32 per-row absolute positions.
+
+        Returns (logits, new_pools, new_resident).
+        """
+        x = _decode_embed(params, batch, pos, settings)
+        new_pools, new_resident = [], []
+        for seg, p_stack, pool_stack, res_stack in zip(
+                segs, params["segments"], pools, resident):
+            def body(x1, inp, seg=seg):
+                p_layer, pool_layer, res_layer = inp
+                np_, nr_ = {}, {}
+                for i, bdef in enumerate(seg.blocks):
+                    bid = f"b{i}"
+                    if bid in pool_layer:
+                        x1, np_[bid] = apply_block_decode_paged(
+                            bdef, p_layer[bid], x1, pool_layer[bid],
+                            tables, pos, cfg, settings)
+                    else:
+                        x1, nr_[bid] = apply_block_decode(
+                            bdef, p_layer[bid], x1, res_layer[bid], pos,
+                            cfg, settings)
+                return x1, (np_, nr_)
+            x, (npool, nres) = jax.lax.scan(
+                body, x, (p_stack, pool_stack, res_stack))
+            new_pools.append(npool)
+            new_resident.append(nres)
+        logits = _head(params, x, cfg, settings)
+        return logits, new_pools, new_resident
 
     def input_specs(shape: ShapeConfig, *, for_loss: bool = True):
         """ShapeDtypeStruct stand-ins for every model input of this cell."""
@@ -436,7 +489,8 @@ def build_model(cfg: ModelConfig) -> ModelApi:
     return ModelApi(
         cfg=cfg, segments=segs, enc_segments=enc_segs, init=init,
         forward=forward, loss=loss, prefill=prefill,
-        decode_step=decode_step, input_specs=input_specs,
+        decode_step=decode_step, decode_step_paged=decode_step_paged,
+        input_specs=input_specs,
         init_cache=lambda B, S, dtype=jnp.bfloat16: init_cache(
             cfg, B, S, dtype),
     )

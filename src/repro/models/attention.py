@@ -162,9 +162,11 @@ def attend_decode(q, cache_k, cache_v, pos, *, window: int = 0,
                   settings: Any = None):
     """One-step decode attention. q: (B, 1, Hq, D); cache: (B, S, Hkv, D).
 
-    pos: scalar int32 — absolute position of the current token (already
-    written into the cache by the caller). With ring=True the cache length S
-    equals the window and slot s holds absolute position
+    pos: absolute position of the current token (already written into
+    the cache by the caller) — a scalar int32, or a (B,) int32 vector
+    when every batch row sits at its own position (continuous batching:
+    each serving slot decodes a different sequence). With ring=True the
+    cache length S equals the window and slot s holds absolute position
     `s + S*floor((pos - s)/S)` (i.e. the most recent token congruent to s).
     """
     B, _, Hq, D = q.shape
@@ -175,16 +177,22 @@ def attend_decode(q, cache_k, cache_v, pos, *, window: int = 0,
     if logit_cap:
         s = softcap(s, logit_cap)
     slots = jnp.arange(S)
+    pos = jnp.asarray(pos)
+    # per-row positions mask as (B, S); a scalar keeps the shared (S,)
+    # mask (broadcast over batch) — same values either way
+    posk = pos[:, None] if pos.ndim == 1 else pos
     if ring:
-        slot_pos = slots + S * ((pos - slots) // S)      # absolute positions
-        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        slot_pos = slots + S * ((posk - slots) // S)     # absolute positions
+        valid = (slot_pos >= 0) & (slot_pos <= posk)
         if window:
-            valid &= slot_pos > pos - window
+            valid &= slot_pos > posk - window
     else:
-        valid = slots <= pos
+        valid = slots <= posk
         if window:
-            valid &= slots > pos - window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+            valid &= slots > posk - window
+    if valid.ndim == 1:
+        valid = valid[None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgs,bshd->bhgd", p, cache_v.astype(jnp.float32))
     return out.reshape(B, 1, Hq, D).astype(q.dtype)

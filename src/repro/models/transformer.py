@@ -282,22 +282,39 @@ def apply_block(bdef: BlockDef, p, x, cfg: ModelConfig,
 # Block apply — single-token decode against caches
 # ====================================================================
 
+def _decode_positions(pos, cfg: ModelConfig):
+    """RoPE positions for one decode token: (1, 1) for a shared scalar
+    pos, (B, 1) for per-row positions (continuous batching)."""
+    if not cfg.use_rope:
+        return None
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:
+        return pos[:, None]
+    return jnp.full((1,), pos, jnp.int32)[None]
+
+
 def apply_block_decode(bdef: BlockDef, p, x1, cache, pos, cfg: ModelConfig,
                        settings: RunSettings) -> Tuple[jnp.ndarray, Any]:
-    """x1: (B, 1, D). cache: per-mixer pytree. pos: scalar int32."""
+    """x1: (B, 1, D). cache: per-mixer pytree. pos: scalar int32, or a
+    (B,) int32 vector when each batch row decodes at its own absolute
+    position (per-slot continuous batching)."""
     h = rms_norm(x1, p["norm"]["scale"], cfg.norm_eps)
+    pos = jnp.asarray(pos)
     if bdef.mixer == "attn":
         ck, cv = cache["k"], cache["v"]
         S = ck.shape[1]
         ring = bool(bdef.window) and S == bdef.window
-        q, k, v = _qkv(p["attn"], h, cfg,
-                       jnp.full((1,), pos, jnp.int32)[None]
-                       if cfg.use_rope else None)
+        q, k, v = _qkv(p["attn"], h, cfg, _decode_positions(pos, cfg))
         slot = jnp.mod(pos, S) if ring else pos
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                 slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                 slot, axis=1)
+        if pos.ndim == 1:
+            rows = jnp.arange(x1.shape[0])
+            ck = ck.at[rows, slot].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, slot].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), slot, axis=1)
         o = attend_decode(q, ck, cv, pos, window=bdef.window,
                           logit_cap=cfg.attn_logit_softcap, ring=ring)
         mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
@@ -320,6 +337,56 @@ def apply_block_decode(bdef: BlockDef, p, x1, cache, pos, cfg: ModelConfig,
     aux: Dict = {}
     x1 = _mlp_sublayer(bdef, p, x1, cfg, settings, aux)
     return x1, new_cache
+
+
+def apply_block_decode_paged(bdef: BlockDef, p, x1, pool, tables, pos,
+                             cfg: ModelConfig, settings: RunSettings
+                             ) -> Tuple[jnp.ndarray, Any]:
+    """Paged-KV decode for one full-attention block (repro.kvcache).
+
+    Instead of a per-slot dense (B, S, H, D) cache, K/V live in a shared
+    device page pool and each batch row owns a page table:
+
+      pool:   {"k","v"}: (N, P, Hkv, D) — N physical pages of P tokens
+              for THIS layer (page 0 is the reserved null page that
+              idle slots scribble into).
+      tables: (B, max_pages) int32 — physical page id of each logical
+              page; unallocated entries point at the null page.
+      pos:    (B,) int32 — absolute position of the current token.
+
+    The step scatters the new K/V into page pos//P at offset pos%P,
+    then gathers each row's pages back into a contiguous
+    (B, max_pages*P, Hkv, D) view and runs the exact dense decode
+    attention on it — token s of row b lives at gathered index s, so
+    the masked scores (and therefore the logits) are bitwise identical
+    to a dense cache of length max_pages*P holding the same sequence.
+    Returns (x1, new_pool).
+    """
+    h = rms_norm(x1, p["norm"]["scale"], cfg.norm_eps)
+    ck, cv = pool["k"], pool["v"]
+    P = ck.shape[1]
+    B = x1.shape[0]
+    n_pages = tables.shape[1]
+    q, k, v = _qkv(p["attn"], h, cfg, _decode_positions(pos, cfg))
+    rows = jnp.arange(B)
+    phys = tables[rows, pos // P]
+    off = pos % P
+    ck = ck.at[phys, off].set(k[:, 0].astype(ck.dtype))
+    cv = cv.at[phys, off].set(v[:, 0].astype(cv.dtype))
+    # gather the rows' logical sequences: (B, n_pages, P, H, D) ->
+    # (B, n_pages*P, H, D); positions beyond pos are masked by
+    # attend_decode, so stale bytes in recycled pages never score
+    gk = ck[tables].reshape(B, n_pages * P, *ck.shape[2:])
+    gv = cv[tables].reshape(B, n_pages * P, *cv.shape[2:])
+    o = attend_decode(q, gk, gv, pos, window=bdef.window,
+                      logit_cap=cfg.attn_logit_softcap)
+    mix = jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+    if cfg.post_block_norm:
+        mix = rms_norm(mix, p["post_norm"]["scale"], cfg.norm_eps)
+    x1 = x1 + mix
+    aux: Dict = {}
+    x1 = _mlp_sublayer(bdef, p, x1, cfg, settings, aux)
+    return x1, {"k": ck, "v": cv}
 
 
 # ====================================================================

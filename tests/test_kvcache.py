@@ -1,0 +1,175 @@
+"""Paged KV-cache subsystem tests (repro.kvcache): allocator units,
+paged/resident layout split, deterministic continuous-batching
+schedules, bitwise paged-vs-dense logits parity (including through
+quantum preemption, i.e. spool eviction round trips), and the serve
+accounting invariants the old driver got wrong."""
+import numpy as np
+import pytest
+
+from repro.kvcache import (DenseKVCache, KVCacheConfig, PageAllocator,
+                           PagePoolExhausted, Server, build_manager)
+from repro.kvcache import adapters
+from repro.launch.serve import build_kv_spool, build_runtime, \
+    make_server, synth_requests
+from repro.models.transformer import BlockDef, SegmentDef
+
+
+# ---------------------------------------------------------------- units
+
+def test_allocator_deterministic_and_null_page():
+    al = PageAllocator(8)            # pages 1..7 usable, 0 reserved
+    a = al.alloc(3)
+    assert a == [1, 2, 3]            # fresh pages ascend
+    assert 0 not in a
+    al.free([2])
+    assert al.alloc(1) == [2]        # LIFO recycle
+    b = al.alloc(4)
+    assert b == [4, 5, 6, 7]
+    assert al.available == 0 and al.in_use == 7
+    with pytest.raises(PagePoolExhausted):
+        al.alloc(1)
+    al.free(a + b)
+    assert al.available == 7 and al.high_water == 7
+
+
+def test_kvcfg_geometry():
+    cfg = KVCacheConfig(page_tokens=16, max_seq_len=100)
+    assert cfg.max_pages == 7
+    assert cfg.padded_seq_len == 112
+    assert cfg.resolve_pool_pages(4) == 4 * 7 + 1
+    assert KVCacheConfig(pool_pages=9).resolve_pool_pages(4) == 9
+
+
+def test_adapter_split():
+    segs = (SegmentDef(n_repeat=2, blocks=(
+        BlockDef("attn"), BlockDef("attn", window=8),
+        BlockDef("rglru"))),)
+    ids = adapters.paged_block_ids(segs, 64)
+    assert ids == [{"b0"}]           # window 8 < 64 stays resident
+    assert adapters.needs_exact_prefill(segs, 64)
+    wide = (SegmentDef(n_repeat=1, blocks=(
+        BlockDef("attn", window=64),)),)
+    assert adapters.paged_block_ids(wide, 64) == [{"b0"}]
+    assert not adapters.needs_exact_prefill(wide, 64)
+
+
+# ------------------------------------------------------------- fixtures
+
+PAGED_KW = dict(page_tokens=8, max_seq_len=48, quantum=3,
+                prefetch_depth=2)
+
+
+@pytest.fixture(scope="module")
+def runtime():
+    return build_runtime("small-gpt", seed=0)
+
+
+def _serve(runtime, kind, *, n_slots=2, requests=6, quantum=0,
+           record_logits=True):
+    cfg, api, params, settings = runtime
+    kvcfg = KVCacheConfig(page_tokens=8, max_seq_len=48,
+                          quantum=quantum, prefetch_depth=2)
+    spool = owned = None
+    if kind == "paged":
+        spool, owned = build_kv_spool("mem")
+    try:
+        server = make_server(api, params, settings, kvcfg, kind=kind,
+                             n_slots=n_slots,
+                             spool=spool, record_logits=record_logits)
+        synth_requests(server, requests, prompt_len=12, max_new=9,
+                       vocab=cfg.vocab_size, seed=7)
+        report = server.run()
+    finally:
+        if spool is not None:
+            spool.close()
+    return server, report
+
+
+# ---------------------------------------------------- determinism/parity
+
+def test_schedule_deterministic(runtime):
+    s1, _ = _serve(runtime, "paged", quantum=3)
+    s2, _ = _serve(runtime, "paged", quantum=3)
+    assert s1.schedule_log == s2.schedule_log
+    assert [q.tokens for q in s1.finished] == \
+        [q.tokens for q in s2.finished]
+
+
+def _by_rid(server):
+    return {s.rid: s for s in server.finished}
+
+
+def test_paged_dense_bitwise_parity(runtime):
+    """Same request trace, paged (no preemption) vs dense: every
+    sampled-from logits row is bitwise identical."""
+    sp, rp = _serve(runtime, "paged")
+    sd, rd = _serve(runtime, "dense")
+    assert rp.generated_tokens == rd.generated_tokens
+    p, d = _by_rid(sp), _by_rid(sd)
+    assert set(p) == set(d)
+    for rid in p:
+        assert p[rid].tokens == d[rid].tokens
+        for a, b in zip(p[rid].logits, d[rid].logits):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_eviction_roundtrip_parity(runtime):
+    """Quantum preemption forces evict->spool->restore cycles; logits
+    must still match the dense baseline bitwise, token for token."""
+    sp, rp = _serve(runtime, "paged", quantum=3)
+    sd, _ = _serve(runtime, "dense")
+    assert rp.preemptions > 0
+    assert rp.kv["pages_evicted"] > 0
+    assert rp.kv["pages_evicted"] == rp.kv["pages_restored"]
+    p, d = _by_rid(sp), _by_rid(sd)
+    for rid in p:
+        assert p[rid].tokens == d[rid].tokens
+        for a, b in zip(p[rid].logits, d[rid].logits):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_concurrency_exceeds_slots(runtime):
+    _, rp = _serve(runtime, "paged", quantum=3)
+    _, rd = _serve(runtime, "dense")
+    assert rd.peak_live <= rd.n_slots
+    assert rp.peak_live > rp.n_slots
+
+
+# ----------------------------------------------------------- accounting
+
+def test_accounting_invariants(runtime):
+    """The fixed serve accounting: the prefill-sampled first token is
+    counted, idle slots are not, prompt tokens are the true lengths."""
+    server, r = _serve(runtime, "paged", quantum=3)
+    assert r.requests == 6
+    assert r.generated_tokens == sum(
+        len(s.tokens) for s in server.finished) == 6 * 9
+    # exactly one token per request came from prefill logits
+    assert r.decode_slot_tokens == r.generated_tokens - r.requests
+    # idle slots never billed: the grid bound is strict when the tail
+    # drains with a single live sequence
+    assert r.decode_slot_tokens <= r.decode_steps * r.n_slots
+    assert r.prompt_tokens == sum(
+        len(s.prompt) for s in server.finished)
+    assert r.kv["prefills"] == 6
+
+
+def test_dense_cannot_evict(runtime):
+    cfg, api, params, settings = runtime
+    cache = build_manager("dense", api, params, settings,
+                          KVCacheConfig(**PAGED_KW), 2)
+    with pytest.raises(RuntimeError, match="cannot evict"):
+        cache.evict(object())
+
+
+def test_submit_validation(runtime):
+    server, _ = None, None
+    cfg, api, params, settings = runtime
+    cache = build_manager("dense", api, params, settings,
+                          KVCacheConfig(page_tokens=8, max_seq_len=16),
+                          2)
+    srv = Server(cache)
+    with pytest.raises(ValueError):
+        srv.submit([], 4)
+    with pytest.raises(ValueError, match="exceeds"):
+        srv.submit(np.arange(10), 10)
