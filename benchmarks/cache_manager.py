@@ -1,0 +1,213 @@
+"""Storage-brain benchmark: CacheManager vs the static `tiered`
+backend on the spool datapath workload, emitting ``BENCH_cache.json``.
+
+Paired A/B in alternating rounds on the same payload: both sides run
+the staged trainer's spool pattern (forward-ordered async stores of
+bf16 residual trees, backward-order fetches with one-ahead prefetch)
+over a host-RAM budget sized to hold about half the stream, with a
+filesystem SSD tier below. Side A is ``TieredBackend`` (the legacy
+static placement: class-blind, FIFO victims, no promotion); side B is
+``CacheManager`` at the SAME budget (class-aware victims, hinted reuse
+horizon, background promotion). Median-of-ratios cancels background
+drift, as in ``spool_datapath.py``.
+
+``--check`` asserts the tentpole's two acceptance bounds and exits
+non-zero on violation:
+
+  * throughput: the manager matches or beats static tiered (a small
+    tolerance absorbs timer noise on millisecond rounds — the manager
+    runs the same data plane, so a real regression shows up well
+    beyond it);
+  * pinned-host bound: the manager's ``peak_host_bytes`` high-water
+    mark never exceeds the configured MemAscend-style budget;
+
+plus bitwise payload parity of every fetched leaf on the manager side.
+A mixed-class residency cell (activations + opt_state + kv pages
+through one manager) reports where each class landed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import statistics
+import tempfile
+import time
+from typing import Dict, List
+
+import numpy as np
+
+try:
+    from benchmarks.spool_datapath import _residual_stream
+except ImportError:      # run as a script: benchmarks/ is sys.path[0]
+    from spool_datapath import _residual_stream
+from repro.cache import CacheConfig, CacheManager
+from repro.core.spool import ActivationSpool
+from repro.io import FilesystemBackend, TieredBackend
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_cache.json")
+
+
+def _spool_round(backend, stream, *, verify: bool = False) -> float:
+    """One staged-trainer pass: store forward, fetch backward with
+    one-ahead prefetch, drop each stage after its backward use."""
+    spool = ActivationSpool(backend, codec="raw", store_threads=2,
+                            min_offload_elements=16)
+    try:
+        t0 = time.perf_counter()
+        for key, leaves in stream.items():
+            spool.offload(key, leaves)
+        spool.wait_io()
+        keys = list(stream)
+        for i in range(len(keys) - 1, -1, -1):
+            if i > 0:
+                spool.prefetch(keys[i - 1])
+            out = spool.fetch(keys[i])
+            if verify:
+                for got, want in zip(out, stream[keys[i]]):
+                    np.testing.assert_array_equal(np.asarray(got),
+                                                  np.asarray(want))
+            spool.drop(keys[i])
+        spool.wait_io()
+        return time.perf_counter() - t0
+    finally:
+        spool.close()
+
+
+def ab_rounds(stream, *, rounds: int = 5) -> Dict:
+    logical = sum(a.nbytes for ls in stream.values() for a in ls)
+    budget = logical // 2               # half the stream fits in RAM
+    root = tempfile.mkdtemp(prefix="bench_cache_ab_")
+    tiered = TieredBackend(FilesystemBackend(os.path.join(root, "t")),
+                           capacity_bytes=budget)
+    managed = CacheManager(FilesystemBackend(os.path.join(root, "m")),
+                           config=CacheConfig(host_bound_bytes=budget))
+    try:
+        t = {"tiered": [], "managed": []}
+        _spool_round(tiered, stream)    # warm page cache / allocators
+        for r in range(rounds):
+            t["tiered"].append(_spool_round(tiered, stream))
+            t["managed"].append(_spool_round(managed, stream,
+                                             verify=(r == 0)))
+        med = {k: statistics.median(v) for k, v in t.items()}
+        st = managed.cache_stats()
+        return {
+            "payload_mb": round(logical / 1e6, 2),
+            "host_bound_mb": round(budget / 1e6, 2),
+            "rounds": rounds,
+            "tiered_gb_s": round(logical / med["tiered"] / 1e9, 3),
+            "managed_gb_s": round(logical / med["managed"] / 1e9, 3),
+            # > 1.0: the manager is faster
+            "managed_speedup": round(statistics.median(
+                [a / b for a, b in zip(t["tiered"], t["managed"])]), 3),
+            "peak_host_bytes": managed.peak_host_bytes,
+            "host_bound_bytes": budget,
+            "evictions": st["evictions"],
+            "promotions": st["promotions"],
+            "fallbacks": st["fallbacks"],
+            "payload_parity": "bitwise",
+        }
+    finally:
+        tiered.close()
+        managed.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def mixed_class_residency(stream) -> Dict:
+    """All three tensor classes live in one manager at twice the host
+    budget: the brain keeps the nearest-reuse class (activations)
+    pinned and demotes kv pages (farthest reuse) first — the placement
+    a class-blind tiered backend cannot express."""
+    logical = sum(a.nbytes for ls in stream.values() for a in ls)
+    root = tempfile.mkdtemp(prefix="bench_cache_mix_")
+    m = CacheManager(FilesystemBackend(os.path.join(root, "ssd")),
+                     config=CacheConfig(host_bound_bytes=logical // 2))
+    try:
+        n = len(stream)
+        blob = os.urandom(max(1, logical // (4 * n)))
+        act = os.urandom(max(1, logical // (2 * n)))
+        t0 = time.perf_counter()
+        for i in range(n):              # kv/opt arrive FIRST...
+            m.write(f"kv{i}_p0", blob)
+            m.write(f"opt{i}_m", blob)
+        for i in range(n):              # ...yet activations win RAM
+            m.write(f"mb0_s{i}", act)
+        wall = time.perf_counter() - t0
+        res = m.residency()
+        return {
+            "write_wall_s": round(wall, 4),
+            "residency": res,
+            "host_mb_by_class": {c: round(b / 1e6, 2)
+                                 for c, b in res["host-ram"].items()},
+            "ssd_mb_by_class": {c: round(b / 1e6, 2)
+                                for c, b in res["ssd"].items()},
+        }
+    finally:
+        m.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def main(argv=()) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small stream (CI smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert manager >= tiered throughput and the "
+                         "pinned-host bound; non-zero exit on violation")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(list(argv))
+
+    if args.quick:
+        stream = _residual_stream(6, 3, 128 * 1024)       # ~4.5 MB
+        rounds = 3
+    else:
+        stream = _residual_stream(6, 3, 2 * 1024 * 1024)  # ~72 MB
+        rounds = 5
+
+    print("name,us_per_call,derived")
+    headline = ab_rounds(stream, rounds=rounds)
+    mixed = mixed_class_residency(stream)
+    print(f"cache_manager/ab,"
+          f"{headline['payload_mb'] / max(headline['managed_gb_s'], 1e-9) * 1e3:.0f},"
+          f"managed_gb_s={headline['managed_gb_s']}"
+          f";tiered_gb_s={headline['tiered_gb_s']}"
+          f";speedup={headline['managed_speedup']}"
+          f";peak_host_mb={round(headline['peak_host_bytes'] / 1e6, 2)}"
+          f";bound_mb={headline['host_bound_mb']}")
+    print(f"# mixed-class residency: host={mixed['host_mb_by_class']} "
+          f"ssd={mixed['ssd_mb_by_class']}")
+
+    out = {"headline": headline, "mixed_class": mixed}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {args.out}")
+
+    if args.check:
+        failures = []
+        # same data plane underneath, so the manager must keep pace;
+        # 10% tolerance absorbs round-to-round fs timing noise on the
+        # small --quick stream
+        if headline["managed_speedup"] < 0.9:
+            failures.append(
+                f"manager slower than static tiered: paired speedup "
+                f"{headline['managed_speedup']} < 0.9")
+        if headline["peak_host_bytes"] > headline["host_bound_bytes"]:
+            failures.append(
+                f"pinned-host bound violated: peak "
+                f"{headline['peak_host_bytes']} > bound "
+                f"{headline['host_bound_bytes']}")
+        if headline["fallbacks"]:
+            failures.append(f"unexpected fallbacks on healthy SSD: "
+                            f"{headline['fallbacks']}")
+        if failures:
+            raise SystemExit("cache-manager check FAILED: "
+                             + "; ".join(failures))
+        print("# cache check passed: manager >= tiered, peak host "
+              "bytes within bound, payload parity bitwise")
+    return [headline, mixed]
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

@@ -11,7 +11,8 @@ import sys
 import time
 
 MODULES = ["fig9_endurance", "table4_offload", "fig10_overhead",
-           "fig11_rok", "io_backends", "spool_datapath", "roofline"]
+           "fig11_rok", "io_backends", "spool_datapath",
+           "cache_manager", "roofline"]
 
 
 def main() -> None:

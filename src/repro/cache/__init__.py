@@ -1,0 +1,31 @@
+"""repro.cache — the unified heterogeneous cache layer.
+
+`reuse_horizon` and `PlacementEngine` are import-light and eagerly
+exported. `CacheManager`/`CacheConfig`/`plan_residency` live in
+`repro.cache.manager`, which imports `repro.io` — and `repro.io.backends`
+imports `repro.cache.placement` — so the manager is exposed lazily
+(PEP 562) to keep the import graph acyclic.
+"""
+from __future__ import annotations
+
+from repro.cache.horizon import reuse_horizon
+from repro.cache.placement import PlacementEngine
+
+__all__ = [
+    "reuse_horizon",
+    "PlacementEngine",
+    "CacheManager",
+    "CacheConfig",
+    "DEFAULT_CLASS_DISTANCES",
+    "plan_residency",
+]
+
+_LAZY = ("CacheManager", "CacheConfig", "DEFAULT_CLASS_DISTANCES",
+         "plan_residency")
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.cache import manager
+        return getattr(manager, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

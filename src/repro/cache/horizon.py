@@ -1,0 +1,37 @@
+"""The one "next needed" computation (reuse horizon) shared by every
+prefetch site.
+
+Before the cache manager, the staged backward walker, the jit hook
+bridge, and the kvcache refill loop each computed their own "what is
+needed next" prefix — same idea, three copies, and the horizon is also
+exactly the signal the `CacheManager` wants as its reuse-distance hint.
+One helper, three call sites, and the manager's `hint_next` consumes
+the same prefix.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, TypeVar
+
+T = TypeVar("T")
+
+
+def reuse_horizon(upcoming: Iterable[T], *, depth: int = 1) -> List[T]:
+    """The prefix of `upcoming` a prefetcher should cover right now.
+
+    `upcoming` is whatever the caller predicts will be accessed next, in
+    access order: the remaining backward stages (``range(si - 1, -1,
+    -1)``) for activation residuals, or the resume queue for parked KV
+    sequences. `depth` bounds how far ahead to act — 1 is the paper's
+    one-module-ahead backward prefetch (§3.3.2); the kvcache uses its
+    configured ``prefetch_depth``. An exhausted iterable yields an empty
+    horizon (stage 0's backward, an empty resume queue) — the caller
+    needs no bounds check of its own.
+    """
+    if depth <= 0:
+        return []
+    out: List[T] = []
+    for item in upcoming:
+        out.append(item)
+        if len(out) >= depth:
+            break
+    return out

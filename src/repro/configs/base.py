@@ -158,10 +158,15 @@ class SpoolIoConfig:
     backend: "fs" (one directory / one SSD), "striped" (round-robin
     chunks across `stripe_dirs`, a multi-SSD array), "mem" (host RAM),
     "tiered" (RAM under `host_mem_budget_bytes`, spilling to a lower
-    fs/striped backend), or "aio" (O_DIRECT-style direct I/O from a
-    pooled aligned buffer with `queue_depth` concurrent segment
-    submission; falls back to buffered+fdatasync+fadvise where the
-    filesystem rejects O_DIRECT).
+    fs/striped backend), "managed" (the `repro.cache.CacheManager`
+    storage brain: class- and reuse-distance-aware placement over the
+    same host-RAM-bounded-over-SSD hierarchy, with background promotion
+    and failing-SSD fallback; `host_mem_budget_bytes` is its pinned-host
+    bound, `cache_ssd` optionally picks the SSD tier by spec string, and
+    `cache_promote_depth` bounds promotions per reuse-horizon hint), or
+    "aio" (O_DIRECT-style direct I/O from a pooled aligned buffer with
+    `queue_depth` concurrent segment submission; falls back to
+    buffered+fdatasync+fadvise where the filesystem rejects O_DIRECT).
 
     The data-plane knobs apply to every backend: `alignment` and
     `pool_bytes` size the shared `AlignedBufferPool` that loads (and
@@ -198,10 +203,14 @@ class SpoolIoConfig:
     alignment: int = 4096           # pool + O_DIRECT alignment
     queue_depth: int = 4            # aio: concurrent segments per blob
     pool_bytes: int = 256 << 20     # idle cap of the aligned pool
+    # --- cache-manager knobs (backend == "managed") ---
+    cache_ssd: Optional[str] = None  # SSD-tier spec; None -> fs/striped
+    cache_promote_depth: int = 2     # promotions per reuse-horizon hint
 
     def validate(self) -> "SpoolIoConfig":
         assert self.backend in ("fs", "striped", "mem", "tiered",
-                                "aio"), self.backend
+                                "managed", "aio"), self.backend
+        assert self.cache_promote_depth >= 0, self.cache_promote_depth
         assert self.stripe_chunk_bytes > 0
         assert self.host_mem_budget_bytes >= 0
         assert self.host_offload in ("none", "opt_state", "activations"), \

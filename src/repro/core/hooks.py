@@ -63,6 +63,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
+from repro.cache.horizon import reuse_horizon
 from repro.core.hostcb import raw_io_callback as io_callback
 from repro.core.spool import ActivationSpool, SpoolStepTransaction
 from repro.parallel.shmap import (axes_size, canonical_axis_entry,
@@ -284,7 +285,10 @@ class HookBridge:
                                 f"{wait:.0f}s — was the forward offload "
                                 f"callback dropped?")
                         self._cv.wait(timeout=min(left, 1.0))
-            tx.prefetch(stage - 1)
+            # one module ahead (§3.3.2): the reuse horizon over the
+            # remaining backward stages
+            for s in reuse_horizon(range(stage - 1, -1, -1)):
+                tx.prefetch(s)
             # to_device=False: the callback returns host arrays straight
             # to XLA — converting through jnp would device_put on the
             # callback thread, the exact jax-runtime dependence

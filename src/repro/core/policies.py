@@ -151,6 +151,14 @@ class AdaptivePolicy(OffloadPolicy):
         self.plan = None
         self.profiles: Optional[List[ModuleProfile]] = None
         self.bandwidths: Optional[BandwidthLike] = None
+        self.cache_manager = None
+
+    def attach_cache_manager(self, manager) -> None:
+        """Connect a `repro.cache.CacheManager` backend: after the
+        profiling step, the policy converts its measured step timing
+        into the manager's per-class reuse distances, so tier placement
+        and the offload plan derive from the same profile."""
+        self.cache_manager = manager
 
     @property
     def wants_profile(self) -> bool:
@@ -167,6 +175,21 @@ class AdaptivePolicy(OffloadPolicy):
         self.plan = plan_offload(self.profiles, bandwidths,
                                  bwd_factor=self.bwd_factor,
                                  always_keep_last=self.always_keep_last)
+        if self.cache_manager is not None:
+            # Measured reuse distances in seconds, one consistent unit:
+            # a residual's mean wait until backward is ~half a step, an
+            # optimizer moment waits a full step (step parity), and a
+            # parked KV sequence is rescaled to keep its default 3x rank
+            # (serving measures its own recency when it runs).
+            t_step = sum(p.fwd_time for p in self.profiles) \
+                * (1.0 + self.bwd_factor)
+            if t_step > 0:
+                self.cache_manager.hint_class_distance(
+                    "activation", 0.5 * t_step)
+                self.cache_manager.hint_class_distance(
+                    "opt_state", t_step)
+                self.cache_manager.hint_class_distance(
+                    "kv_page", 3.0 * t_step)
         return self.plan
 
     def plan_for_jit(self, *, shard_fraction: float = 1.0) \

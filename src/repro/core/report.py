@@ -33,6 +33,10 @@ class StepReport:
     # per-shard HookBridge traffic deltas for this step, keyed by shard
     # id ("global" on a single device)
     shard_stats: Optional[Dict[str, Dict[str, int]]] = None
+    # cache-manager block for this step (managed backend only): counter
+    # deltas + residency gauges from CacheManager.metrics_delta; emitted
+    # with a cache_ prefix
+    cache: Optional[Dict[str, Any]] = None
 
     def to_metrics(self) -> Dict[str, Any]:
         """Flat JSON-able dict — the unified metrics-JSONL schema.
@@ -62,6 +66,9 @@ class StepReport:
                 rec[f"obs_{k}"] = v
         if self.shard_stats:
             rec["shards"] = self.shard_stats
+        if self.cache:
+            for k, v in self.cache.items():
+                rec[f"cache_{k}"] = v
         for k, v in self.extra.items():
             rec.setdefault(k, v)
         return rec

@@ -368,6 +368,15 @@ class ActivationSpool:
             backend = FilesystemBackend(backend)
         self.backend = backend
         self.dir = getattr(backend, "directory", None)
+        # A cache-manager backend (repro.cache.CacheManager, duck-typed
+        # on hint_next) gets the spool's tensor classes declared up
+        # front and its reuse-distance hints fed from prefetch: the same
+        # horizon that drives load scheduling drives tier placement.
+        self.cache_manager = backend if hasattr(backend, "hint_next") \
+            else None
+        if self.cache_manager is not None:
+            self.cache_manager.register_class("activation")
+            self.cache_manager.register_class("opt_state", prefix="opt")
         self.codec = get_codec(codec)
         # One aligned pool serves the whole data plane: loads readinto
         # leased buffers (no per-load blob allocation), and an aio
@@ -516,6 +525,11 @@ class ActivationSpool:
             }
 
     def prefetch(self, key, *, _demand: bool = False) -> None:
+        if self.cache_manager is not None:
+            # the reuse horizon doubles as the placement hint: protect
+            # the blob from eviction and let the manager promote it off
+            # SSD ahead of the load worker's read
+            self.cache_manager.hint_next([str(key)])
         with self._lock:
             rec = self._records.get(key)
             if rec is None or not rec["spool_idx"]:

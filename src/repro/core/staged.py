@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.cache.horizon import reuse_horizon
 from repro.core.accounting import MemoryTracker
 from repro.core.adaptive import ModuleProfile, OffloadPlan
 from repro.core.policies import OffloadPolicy, resolve_policy
@@ -322,6 +323,10 @@ class StagedTrainer:
             # with an uncontended burst sized like the largest module.
             max_bytes = max((p.bytes for p in profiles), default=0)
             self.spool.calibrate_backend(min(max_bytes, 8 << 20))
+            cm = getattr(self.spool, "cache_manager", None)
+            if cm is not None and \
+                    hasattr(self.policy, "attach_cache_manager"):
+                self.policy.attach_cache_manager(cm)
             self.policy.on_profile(profiles,
                                    self.spool.planner_bandwidth())
         self._step += 1
@@ -406,11 +411,11 @@ class StagedTrainer:
         bwd_sp.__enter__()
         for si in range(n_stages - 1, -1, -1):
             stage = self._stages[si]
-            if si - 1 >= 0:
-                # one module ahead (§3.3.2) — including stage 0: the
-                # embed stage's residuals were a cold blocking load
-                # under the old `> 0` off-by-one
-                tx.prefetch(si - 1)
+            # one module ahead (§3.3.2) — including stage 0: the embed
+            # stage's residuals were a cold blocking load under an old
+            # `> 0` off-by-one. reuse_horizon is empty at si == 0.
+            for s in reuse_horizon(range(si - 1, -1, -1)):
+                tx.prefetch(s)
             if si in recompute_in:
                 outs = stage.bwd_recompute(stage_params[si],
                                            recompute_in[si], carry_g)

@@ -12,6 +12,12 @@ Layering (bottom up):
   aio      O_DIRECT-style direct I/O with depth-N submission
   factory  SpoolIoConfig / spec-string -> backend construction
 
+The `managed` backend kind (the class- and reuse-distance-aware
+storage brain over the same stores) lives in `repro.cache.manager` and
+registers itself here; `tiered`'s placement protocol is the static
+configuration of the shared `repro.cache.placement.PlacementEngine`.
+
+
 `core/spool.py` composes these: serialize_parts -> encode_parts(codec)
 -> backend.write_parts on the store path (zero payload copies for the
 raw codec on vectored backends), and readinto a pooled buffer ->
@@ -44,6 +50,16 @@ __all__ = [
     "CODECS", "BytePlaneCodec", "Codec", "RawCodec", "ZlibCodec",
     "encode_parts", "get_codec", "pack", "pack_parts", "register_codec",
     "unpack", "unpack_aliased",
+    "CacheConfig", "CacheManager",
     "backend_from_spec", "build_backend", "parse_bytes",
     "deserialize_leaves", "serialize_leaves", "serialize_parts",
 ]
+
+
+def __getattr__(name):
+    # lazy re-export: repro.cache.manager imports repro.io.backend, so
+    # an eager import here would cycle whenever repro.cache loads first
+    if name in ("CacheConfig", "CacheManager"):
+        from repro.cache import manager
+        return getattr(manager, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -366,6 +366,11 @@ def register_backend(name: str):
 
 
 def get_backend_cls(name: str) -> Type[StorageBackend]:
+    if name == "managed" and name not in BACKENDS:
+        # the cache manager registers itself on import; it lives in
+        # repro.cache (which imports this module), so it cannot be
+        # imported eagerly here
+        import repro.cache.manager  # noqa: F401
     try:
         return BACKENDS[name]
     except KeyError:

@@ -3,12 +3,12 @@ registry: filesystem (seed behavior), multi-SSD striping, host-RAM, and
 the capacity-budgeted RAM-over-SSD tier."""
 from __future__ import annotations
 
-import collections
 import os
 import threading
 import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.cache.placement import PlacementEngine
 from repro.core.adaptive import TierBandwidth
 from repro.io.backend import (StorageBackend, as_memoryviews, preadv_all,
                               pwritev_all, register_backend)
@@ -319,165 +319,61 @@ class TieredBackend(StorageBackend):
     in the future — they are evicted first (Belady's choice under the
     spool's LIFO access pattern). Blobs larger than the whole budget
     bypass RAM entirely.
+
+    The placement protocol itself lives in
+    `repro.cache.placement.PlacementEngine`; this class is the static
+    (class-blind, FIFO-victim, no-promotion) configuration of it, kept
+    for configs that want the fixed byte-budget split without the
+    `CacheManager`'s reuse-distance machinery.
     """
 
     def __init__(self, lower: StorageBackend, *, capacity_bytes: int,
                  upper: Optional[HostMemoryBackend] = None):
         super().__init__()
-        if capacity_bytes < 0:
-            raise ValueError("capacity_bytes must be >= 0")
         self.upper = upper if upper is not None else HostMemoryBackend()
         self.lower = lower
         self.capacity_bytes = capacity_bytes
-        self._lock = threading.Lock()
-        self._spill_done = threading.Condition(self._lock)
-        # key -> nbytes, in store order (front = evict first)
-        self._resident: "collections.OrderedDict[str, int]" = \
-            collections.OrderedDict()
-        self._spilling: set = set()      # victims mid-flight to lower
-        self._kill: set = set()          # deleted while spilling
-        self._lowered: set = set()       # keys with a blob in lower
-        self._resident_bytes = 0         # running sum of _resident
-        self.evictions = 0
-        self.bytes_evicted = 0
+        self._engine = PlacementEngine(
+            self.upper, lower, capacity_bytes=capacity_bytes,
+            note_copy=self._note_copy)
 
     @property
     def resident_bytes(self) -> int:
-        with self._lock:
-            return self._resident_bytes
+        return self._engine.resident_bytes
+
+    @property
+    def evictions(self) -> int:
+        return self._engine.evictions
+
+    @property
+    def bytes_evicted(self) -> int:
+        return self._engine.bytes_evicted
 
     def _write(self, key: str, data: bytes) -> None:
         # a pre-joined blob is stored by reference in RAM: no join copy
-        self._put(key, len(data), lambda tier: tier.write(key, data))
+        self._engine.put(key, len(data),
+                         lambda tier: tier.write(key, data))
 
     def _write_parts(self, key: str, parts: List[memoryview]) -> None:
-        self._put(key, sum(len(p) for p in parts),
-                  lambda tier: tier.write_parts(key, parts),
-                  ram_copy=True)
-
-    def _put(self, key: str, nbytes: int, put,
-             ram_copy: bool = False) -> None:
-        """Placement engine shared by the joined and vectored write
-        paths: `put(tier)` lands the payload on the chosen tier.
-        `ram_copy` marks a part-list payload, whose RAM-tier placement
-        joins (one host copy) — counted on THIS backend's stats too, so
-        the tiered copies-per-byte number stays honest; lower-tier
-        copies live on the lower backend's own stats."""
-        if nbytes > self.capacity_bytes:
-            # Oversize blobs bypass RAM. Wait out any in-flight spill of
-            # this key first — the spiller's stale copy must neither
-            # clobber nor delete the new lower-tier blob — and claim the
-            # key out of _resident so no evictor picks it up meanwhile.
-            with self._spill_done:
-                while key in self._spilling:
-                    self._spill_done.wait()
-                nb = self._resident.pop(key, None)
-                if nb is not None:
-                    self._resident_bytes -= nb
-                self._lowered.add(key)
-            put(self.lower)
-            if nb is not None:
-                self.upper.delete(key)
-            return
-        # Choose victims under the lock, but do the spill I/O outside
-        # it: lower-tier writes are the slow part, and serializing every
-        # spool store thread behind one eviction would reduce the tiered
-        # backend to single-threaded SSD throughput. RAM can transiently
-        # exceed the budget by the blobs in flight; the bookkeeping
-        # (`_resident`) never does.
-        with self._lock:
-            victims = []
-            while self._resident and \
-                    self._resident_bytes + nbytes > self.capacity_bytes:
-                k, nb = self._resident.popitem(last=False)
-                self._resident_bytes -= nb
-                self._spilling.add(k)
-                victims.append(k)
-            put(self.upper)
-            if ram_copy:
-                self._note_copy(nbytes)
-            prev = self._resident.pop(key, 0)
-            self._resident[key] = nbytes
-            self._resident_bytes += nbytes - prev
-            # a stale lower copy from an earlier oversize lease of this
-            # key must not outlive the resident-only delete path
-            stale_lower = key in self._lowered
-            self._lowered.discard(key)
-        if stale_lower:
-            self.lower.delete(key)
-        for k in victims:
-            try:
-                blob = self.upper.read(k)
-            except FileNotFoundError:
-                with self._spill_done:
-                    self._spilling.discard(k)
-                    self._kill.discard(k)
-                    self._spill_done.notify_all()
-                continue
-            # write lower BEFORE deleting upper, so a concurrent read
-            # always finds the blob on one side
-            self.lower.write(k, blob)
-            with self._spill_done:
-                self._spilling.discard(k)
-                killed = k in self._kill
-                self._kill.discard(k)
-                # spool keys are reused across steps: the key may have
-                # been re-written (a fresh resident blob) while we were
-                # spilling the old one
-                readmitted = k in self._resident
-                if not (killed or readmitted):
-                    self._lowered.add(k)
-                self.evictions += 1
-                self.bytes_evicted += len(blob)
-                self._spill_done.notify_all()
-            if killed or readmitted:
-                # our spilled copy is stale — it must not shadow the
-                # re-admitted blob (or survive a drop)
-                self.lower.delete(k)
-                if killed and not readmitted:
-                    self.upper.delete(k)
-            else:
-                self.upper.delete(k)
+        # ram_copy: a part-list payload's RAM placement joins (one host
+        # copy) — counted on THIS backend's stats too, so the tiered
+        # copies-per-byte number stays honest; lower-tier copies live on
+        # the lower backend's own stats
+        self._engine.put(key, sum(len(p) for p in parts),
+                         lambda tier: tier.write_parts(key, parts),
+                         ram_copy=True)
 
     def _read(self, key: str) -> bytes:
-        # Try RAM first and fall through on miss: eviction writes to the
-        # lower tier *before* deleting from the upper, so a key mid-spill
-        # is always found on one side without taking the lock.
-        try:
-            return self.upper.read(key)
-        except FileNotFoundError:
-            return self.lower.read(key)
+        return self._engine.read(key)
 
     def _readinto(self, key: str, buf: memoryview) -> int:
-        try:
-            return len(self.upper.readinto(key, buf))
-        except FileNotFoundError:
-            return len(self.lower.readinto(key, buf))
+        return self._engine.readinto(key, buf)
 
     def _size(self, key: str) -> Optional[int]:
-        with self._lock:
-            nb = self._resident.get(key)
-        if nb is not None:
-            return nb
-        # mid-spill or lowered: the same upper-then-lower order as reads
-        n = self.upper.size(key)
-        return n if n is not None else self.lower.size(key)
+        return self._engine.size(key)
 
     def _delete(self, key: str) -> None:
-        with self._lock:
-            nb = self._resident.pop(key, None)
-            resident = nb is not None
-            if resident:
-                self._resident_bytes -= nb
-            spilling = key in self._spilling
-            if spilling:
-                self._kill.add(key)    # the spiller finishes the delete
-            lowered = key in self._lowered
-            self._lowered.discard(key)
-        if resident:
-            self.upper.delete(key)
-        if not spilling and (lowered or not resident):
-            self.lower.delete(key)
+        self._engine.delete(key)
 
     def flush(self) -> None:
         self.lower.flush()

@@ -11,6 +11,8 @@ Spec grammar (CLI surface, `--spool-backend`-style flags):
     striped:/base@4         stripe across 4 subdirs of /base
     tiered:64mb             RAM budget 64 MiB over fs default
     tiered:64mb,<spec>      RAM budget over any lower spec (recursive)
+    managed:64mb            cache-manager brain, 64 MiB host bound, fs SSD
+    managed:64mb,<spec>     ... over any lower spec (recursive)
     aio                     O_DIRECT data plane under the default dir
     aio:/path@8             O_DIRECT at /path, submission depth 8
     fault:<spec>            fault-injection wrapper over any lower spec
@@ -114,6 +116,20 @@ def backend_from_spec(spec: str, *,
         return _own_tmpdirs(
             TieredBackend(lower, capacity_bytes=parse_bytes(budget)),
             created)
+    if kind == "managed":
+        # imported here, not at module top: the manager module itself
+        # imports repro.io.backend, so an eager import would cycle when
+        # repro.cache loads first
+        from repro.cache.manager import CacheManager
+        budget, _, lower_spec = rest.partition(",")
+        if not budget:
+            raise ValueError("managed spec needs a host-RAM bound, e.g. "
+                             "'managed:64mb'")
+        lower = backend_from_spec(lower_spec or "fs", base_dir=base_dir)
+        created += list(getattr(lower, "owned_tmpdirs", ()))
+        return _own_tmpdirs(
+            CacheManager(lower, host_bound_bytes=parse_bytes(budget)),
+            created)
     if kind == "fault":
         fail_writes = 0
         if rest.startswith("@"):          # fault@N:<inner>
@@ -168,4 +184,21 @@ def build_backend(io_cfg, *,
             TieredBackend(lower,
                           capacity_bytes=io_cfg.host_mem_budget_bytes),
             created)
+    if kind == "managed":
+        from repro.cache.manager import CacheConfig, CacheManager
+        # SSD tier: the --cache-ssd spec when given, else the same
+        # stripe-dirs/directory resolution the tiered backend uses
+        ssd_spec = getattr(io_cfg, "cache_ssd", None)
+        if ssd_spec:
+            lower = backend_from_spec(ssd_spec, base_dir=default_dir)
+            created += list(getattr(lower, "owned_tmpdirs", ()))
+        elif io_cfg.stripe_dirs:
+            lower = StripedBackend(list(io_cfg.stripe_dirs),
+                                   chunk_bytes=io_cfg.stripe_chunk_bytes)
+        else:
+            lower = FilesystemBackend(directory())
+        cfg = CacheConfig(
+            host_bound_bytes=io_cfg.host_mem_budget_bytes,
+            promote_depth=getattr(io_cfg, "cache_promote_depth", 2))
+        return _own_tmpdirs(CacheManager(lower, config=cfg), created)
     raise ValueError(f"unhandled backend kind {kind!r}")

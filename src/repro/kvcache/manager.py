@@ -117,6 +117,14 @@ class PagedKVCache(_ManagerBase):
         if spool is None:
             raise ValueError("PagedKVCache needs a spool for eviction")
         self.spool = spool
+        # Under a cache-manager backend, parked KV pages are a declared
+        # tensor class (lease keys `kv{rid}_*`): they compete with
+        # activations and opt_state for the bounded host-RAM tier on
+        # reuse distance (decode recency via the refill horizon's
+        # prefetch hints) instead of through a private heuristic.
+        cm = getattr(spool, "cache_manager", None)
+        if cm is not None:
+            cm.register_class("kv_page", prefix="kv")
         self.n_pool_pages = kvcfg.resolve_pool_pages(n_slots)
         self.alloc = PageAllocator(self.n_pool_pages)
         self.paged_ids = adapters.paged_block_ids(api.segments, self.S)

@@ -39,6 +39,7 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro import obs
+from repro.cache.horizon import reuse_horizon
 
 __all__ = ["Request", "Sequence", "Server", "ServeReport"]
 
@@ -234,9 +235,11 @@ class Server:
         """One scheduler iteration: refill, prefetch, fault-in, decode,
         sample, retire/preempt."""
         self._refill()
-        for i, seq in enumerate(self.resume_q):
-            if i >= self.kvcfg.prefetch_depth:
-                break
+        # the refill horizon: sequences about to re-enter decode, in
+        # resume order — the same prefix the cache manager consumes as
+        # its kv_page reuse hint
+        for seq in reuse_horizon(self.resume_q,
+                                 depth=self.kvcfg.prefetch_depth):
             self.cache.prefetch(seq)
         active = [(i, s) for i, s in enumerate(self.slots)
                   if s is not None]

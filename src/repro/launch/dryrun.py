@@ -22,6 +22,7 @@ from repro.launch.hlo_stats import analyze_hlo, cost_analysis_dict
 from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
                                make_production_mesh, mesh_axes)
 from repro.launch.steps import make_step
+from repro.cache.manager import plan_residency
 from repro.io.backend import NOMINAL_WRITE_BW
 from repro.models.api import build_model
 from repro.optim.optimizers import adamw, sgd
@@ -76,12 +77,41 @@ def _predict_overlap(host_bytes: float, write_bw: float,
     }
 
 
+def _predict_residency(kind: str, host_bytes: float, n_params: int,
+                       chips: int, optimizer: Optional[str],
+                       host_bound_bytes: int) -> Dict[str, Any]:
+    """Predicted per-class bytes per storage tier at this cell's planned
+    micro-batch, from the cache manager's own placement model
+    (`repro.cache.plan_residency`): nearest-reuse classes keep the
+    bounded pinned-host tier, overflow lands on SSD. The per-class keys
+    match the `cache_residency` block a managed-backend run emits in the
+    metrics JSONL, so prediction and measurement pair row-for-row, the
+    way `predicted_overlap` pairs with the obs tracer."""
+    # fp32 moment state staged through the spool between steps: AdamW
+    # carries two moments (8 B/param), plain SGD carries none
+    opt_b = {"adamw": 8, "sgd": 0}.get(optimizer or "", 0)
+    class_bytes = {
+        "activation": int(host_bytes),
+        "opt_state": (int(n_params / chips) * opt_b
+                      if kind == "train" else 0),
+        # train cells serve no decode traffic; serving predictions get
+        # their KV footprint from the live kvcache, not the dry run
+        "kv_page": 0,
+    }
+    return {
+        "host_bound_bytes": int(host_bound_bytes),
+        "per_class": plan_residency(class_bytes,
+                                    host_bound_bytes=host_bound_bytes),
+    }
+
+
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
              out_dir: str, dump_hlo: bool = False,
              policy: Optional[str] = None, attn_chunk: int = 1024,
              force: bool = False, tag: str = "",
              baseline: bool = False,
-             io_backend: str = "fs") -> Dict[str, Any]:
+             io_backend: str = "fs",
+             cache_host_bound_mb: int = 256) -> Dict[str, Any]:
     if baseline:
         os.environ["REPRO_NO_BLOCKED_ATTN"] = "1"
         tag = tag or "paperbase"
@@ -199,6 +229,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             # repro.obs.overlap.predicted_vs_measured().
             predicted_overlap=_predict_overlap(
                 ana.host_bytes, NOMINAL_WRITE_BW[io_backend], t_compute),
+            # Predicted tier residency per tensor class under the
+            # managed cache's placement model — pairs with the
+            # cache_residency block of a --cache-managed run's metrics
+            predicted_residency=_predict_residency(
+                shape.kind, ana.host_bytes, bundle.n_params, chips,
+                rec.get("optimizer"), cache_host_bound_mb << 20),
         )
     except Exception as e:  # record the failure, don't kill the sweep
         rec.update(status="error", error=f"{type(e).__name__}: {e}",
@@ -283,6 +319,10 @@ def main() -> None:
                     choices=sorted(NOMINAL_WRITE_BW),
                     help="repro.io backend whose nominal write bandwidth "
                          "prices the projected host-offload traffic")
+    ap.add_argument("--cache-host-bound-mb", type=int, default=256,
+                    help="pinned-host bound used by the "
+                         "predicted_residency block (pair with the "
+                         "--cache-host-bound-mb of the measured run)")
     ap.add_argument("--timeout", type=int, default=2400)
     args = ap.parse_args()
 
@@ -300,6 +340,8 @@ def main() -> None:
         extra += ["--tag", args.tag]
     if args.io_backend != "fs":
         extra += ["--io-backend", args.io_backend]
+    if args.cache_host_bound_mb != 256:
+        extra += ["--cache-host-bound-mb", str(args.cache_host_bound_mb)]
 
     if args.all:
         n = sweep(meshes, args.out, args.force, args.timeout, extra)
@@ -312,7 +354,8 @@ def main() -> None:
                        dump_hlo=args.dump_hlo, policy=args.policy,
                        attn_chunk=args.attn_chunk, force=args.force,
                        tag=args.tag, baseline=args.baseline,
-                       io_backend=args.io_backend)
+                       io_backend=args.io_backend,
+                       cache_host_bound_mb=args.cache_host_bound_mb)
         status = rec.get("status")
         if status == "ok":
             rl = rec["roofline"]
@@ -331,6 +374,13 @@ def main() -> None:
                       f"{po['t_fwd_s']:.3e}s, fetch "
                       f"{po['t_fetch_s']:.3e}s in bwd "
                       f"{po['t_bwd_s']:.3e}s)")
+            pr = rec.get("predicted_residency")
+            if pr:
+                per = {cls: (f"{b['host_ram_bytes'] >> 20}MiB host + "
+                             f"{b['ssd_bytes'] >> 20}MiB ssd")
+                       for cls, b in pr["per_class"].items()}
+                print(f"predicted residency (host bound "
+                      f"{pr['host_bound_bytes'] >> 20}MiB): {per}")
         elif status == "skip":
             print(f"{args.arch} x {args.shape} [{mesh_name}] SKIP: "
                   f"{rec['skip_reason']}")

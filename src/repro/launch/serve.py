@@ -35,6 +35,7 @@ from repro import obs
 from repro.configs.base import SpoolIoConfig
 from repro.core.spool import build_spool
 from repro.kvcache import KVCacheConfig, Server, build_manager
+from repro.launch.cacheargs import add_cache_args, cache_overrides
 from repro.launch.train import resolve_config
 from repro.models.api import build_model
 from repro.models.transformer import RunSettings
@@ -53,13 +54,14 @@ def build_runtime(arch: str, seed: int = 0):
 
 
 def build_kv_spool(backend: str = "fs", directory=None,
-                   codec: str = "byteplane"):
+                   codec: str = "byteplane", **io_kwargs):
     """A spool for KV pages: same data plane as training activations
     (bufpool + aio/fs + byteplane), but with the small-tensor bypass off
-    — KV pages are small and must actually hit storage. Returns
+    — KV pages are small and must actually hit storage. Extra kwargs are
+    `SpoolIoConfig` fields (the --cache-* family lands here). Returns
     (spool, owned_tmpdirs)."""
     io_cfg = SpoolIoConfig(backend=backend, directory=directory,
-                           codec=codec)
+                           codec=codec, **io_kwargs)
     return build_spool(io_cfg, min_offload_elements=0)
 
 
@@ -108,8 +110,10 @@ def main() -> None:
     ap.add_argument("--prefetch-depth", type=int, default=2,
                     help="parked sequences prefetched ahead of refill")
     ap.add_argument("--kv-backend", default="fs",
-                    choices=("fs", "aio", "mem"),
-                    help="spool storage for evicted pages")
+                    choices=("fs", "aio", "mem", "managed"),
+                    help="spool storage for evicted pages; 'managed' "
+                         "is the repro.cache storage brain (see the "
+                         "--cache-* family)")
     ap.add_argument("--kv-dir", default=None,
                     help="spool directory (default: fresh temp dir)")
     ap.add_argument("--kv-codec", default="byteplane",
@@ -119,6 +123,7 @@ def main() -> None:
                          "serve.* scheduling, io.* spool lanes)")
     ap.add_argument("--json", dest="json_out", default=None,
                     help="write the serve report as JSON")
+    add_cache_args(ap)
     args = ap.parse_args()
 
     if args.trace:
@@ -132,8 +137,10 @@ def main() -> None:
     spool = None
     owned = []
     if args.cache == "paged":
-        spool, owned = build_kv_spool(args.kv_backend, args.kv_dir,
-                                      args.kv_codec)
+        cache_ov = cache_overrides(args)
+        kv_backend = cache_ov.pop("backend", args.kv_backend)
+        spool, owned = build_kv_spool(kv_backend, args.kv_dir,
+                                      args.kv_codec, **cache_ov)
     try:
         server = make_server(api, params, settings, kvcfg,
                              kind=args.cache, n_slots=args.batch,

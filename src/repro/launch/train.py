@@ -31,6 +31,7 @@ import argparse
 import time
 
 from repro.configs.base import SpoolIoConfig
+from repro.launch.cacheargs import add_cache_args, cache_overrides
 from repro.session import TrainSession, resolve_config  # noqa: F401
 # resolve_config is re-exported for back-compat: it used to live here.
 
@@ -61,10 +62,13 @@ def main() -> None:
                     help="min elements to offload through the spool "
                          "(default: paper's 2**20)")
     ap.add_argument("--spool-backend", default="fs",
-                    choices=["fs", "striped", "mem", "tiered", "aio"],
+                    choices=["fs", "striped", "mem", "tiered",
+                             "managed", "aio"],
                     help="storage backend for the activation spool "
                          "(repro.io); honored by BOTH engines. 'aio' "
-                         "is the O_DIRECT zero-copy data plane")
+                         "is the O_DIRECT zero-copy data plane; "
+                         "'managed' is the repro.cache storage brain "
+                         "(see the --cache-* family)")
     ap.add_argument("--spool-dir", default=None,
                     help="spool directory (default: fresh temp dir, "
                          "removed on close)")
@@ -117,6 +121,7 @@ def main() -> None:
                     help="per-thread trace ring capacity in events "
                          "(default 65536; older events are dropped and "
                          "counted when a ring fills)")
+    add_cache_args(ap)
     args = ap.parse_args()
 
     mesh = None
@@ -145,15 +150,19 @@ def main() -> None:
 
     stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
                         if d)
+    cache_ov = cache_overrides(args)
     io = SpoolIoConfig(
-        backend=args.spool_backend, directory=args.spool_dir,
+        backend=cache_ov.pop("backend", args.spool_backend),
+        directory=args.spool_dir,
         stripe_dirs=stripe_dirs, codec=args.codec,
-        host_mem_budget_bytes=args.host_mem_budget_mb << 20,
+        host_mem_budget_bytes=cache_ov.pop(
+            "host_mem_budget_bytes", args.host_mem_budget_mb << 20),
         host_offload=args.host_offload,
         dedupe_replicas=not args.spool_no_dedupe,
         alignment=args.spool_align,
         queue_depth=args.spool_queue_depth,
-        pool_bytes=args.spool_pool_mb << 20)
+        pool_bytes=args.spool_pool_mb << 20,
+        **cache_ov)
 
     # the context manager guarantees teardown (worker-thread join, temp
     # spool/ckpt dir removal) on exceptions and Ctrl-C too

@@ -195,6 +195,7 @@ class TrainSession:
         self._shard_snapshot: dict = {}
         self._obs_cursor = None
         self._counters_snapshot: dict = {}
+        self._cache_snapshot = None
 
         if loader is None:
             loader = ShardedLoader(
@@ -369,7 +370,13 @@ class TrainSession:
                        for k, v in counters.items()}
             self._counters_snapshot = counters
             obs_delta = overlap.analyze(events, delta_c)
-        return stats_delta, shard_delta, obs_delta
+        cache_delta = None
+        cm = getattr(self.spool, "cache_manager", None) \
+            if self.spool is not None else None
+        if cm is not None:
+            cache_delta, self._cache_snapshot = \
+                cm.metrics_delta(self._cache_snapshot)
+        return stats_delta, shard_delta, obs_delta, cache_delta
 
     def _emit(self, rep: StepReport,
               on_report: Optional[Callable]) -> None:
@@ -412,7 +419,8 @@ class TrainSession:
                 params, opt_state, batches)
             step += 1
             rep.step = step
-            rep.stats, rep.shard_stats, rep.obs = self._step_deltas()
+            rep.stats, rep.shard_stats, rep.obs, rep.cache = \
+                self._step_deltas()
             tokens = sum(_batch_tokens(b) for b in batches)
             rep.tokens_per_s = tokens / rep.step_time \
                 if rep.step_time else 0.0
@@ -433,13 +441,14 @@ class TrainSession:
                     extra[k] = float(v)
                 except (TypeError, ValueError):
                     pass
-            stats_d, shard_d, obs_d = self._step_deltas()
+            stats_d, shard_d, obs_d, cache_d = self._step_deltas()
             rep = StepReport(
                 loss=extra.get("loss", float("nan")),
                 step_time=dt, step=step, engine="jit",
                 stats=stats_d,
                 tokens_per_s=tokens / dt if dt else 0.0,
-                extra=extra, obs=obs_d, shard_stats=shard_d)
+                extra=extra, obs=obs_d, shard_stats=shard_d,
+                cache=cache_d)
             self._emit(rep, on_report)
 
         if self._loop is None:

@@ -58,18 +58,50 @@ def jit_baseline():
         return {"losses": result.losses, "params": result.state.params}
 
 
-def test_jit_activations_matches_no_offload_baseline(jit_baseline):
-    """host_offload="activations" must be math-transparent: per-step
-    losses bitwise-equal to the no-offload jit baseline, final params
-    equal up to XLA fusion noise (the hook path compiles a differently
-    fused backward), and real residual bytes on the backend."""
+@pytest.fixture(scope="module")
+def hooked_baseline():
+    """SAME-COMPILE bitwise reference for the activation-offload path.
+
+    The hooked step is a different XLA program than the keep-settings
+    one (the io_callbacks change fusion decisions in the backward), so
+    comparing hooked losses against `jit_baseline` bitwise is comparing
+    two compiles — after the first optimizer update the params carry
+    ~1-ulp fusion noise and step>=1 losses legitimately differ in the
+    last bit (the old flaky assertion). The invariant offloading must
+    actually guarantee is *placement transparency*: the same compiled
+    program must produce bitwise-identical results no matter which
+    backend holds the residuals or how stores race fetches. This mem-
+    backend hooked run is the reference for that comparison."""
     with _session("jit", io=SpoolIoConfig(
             backend="mem", host_offload="activations")) as sess:
+        result = sess.run(3)
+        return {"losses": result.losses, "params": result.state.params}
+
+
+def test_jit_activations_matches_no_offload_baseline(jit_baseline,
+                                                     hooked_baseline):
+    """host_offload="activations" must be math-transparent: bitwise
+    equal to the same-compile hooked reference across backends
+    (placement transparency), equal to the no-offload jit baseline up
+    to cross-compile fusion noise, and real residual bytes must land on
+    the backend."""
+    with _session("jit", io=SpoolIoConfig(
+            backend="fs", host_offload="activations")) as sess:
         result = sess.run(3)
         stats = dataclasses.replace(sess.spool.stats)
         io_writes = sess.spool.backend.stats.num_writes
         leftover = dict(sess.spool._records)
-    assert result.losses == jit_baseline["losses"]     # bitwise
+    # same compiled program, different residual placement: bitwise
+    assert result.losses == hooked_baseline["losses"]
+    for a, b in zip(jax.tree.leaves(hooked_baseline["params"]),
+                    jax.tree.leaves(result.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # vs the keep-settings compile: NOT asserted bitwise — a different
+    # XLA program fuses the backward differently, so updated params
+    # (and every loss computed from them) may differ in the last ulp.
+    # The tolerance covers that compile noise, nothing more.
+    np.testing.assert_allclose(result.losses, jit_baseline["losses"],
+                               rtol=1e-5)
     for a, b in zip(jax.tree.leaves(jit_baseline["params"]),
                     jax.tree.leaves(result.state.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -95,17 +127,18 @@ def test_jit_vs_staged_parity_with_activations():
     np.testing.assert_allclose(staged, hooked, rtol=5e-3)
 
 
-def test_forwarding_under_fetch_racing_store(jit_baseline):
+def test_forwarding_under_fetch_racing_store(hooked_baseline):
     """A backward io_callback fetch that catches the store still queued
     or in flight must forward the in-memory reference (§3.3.2) — and
-    the math stays exact either way."""
+    the math stays exact either way: bitwise against the same-compile
+    hooked reference (see `hooked_baseline` for why not the keep one)."""
     with _session("jit", io=SpoolIoConfig(
             backend="fs", store_threads=1, bandwidth_limit=2e6,
             host_offload="activations")) as sess:
         result = sess.run(2)
         stats = dataclasses.replace(sess.spool.stats)
     assert stats.bytes_forwarded > 0
-    assert result.losses == jit_baseline["losses"][:2]  # still bitwise
+    assert result.losses == hooked_baseline["losses"][:2]  # bitwise
 
 
 def test_activations_mode_cli_flag_roundtrip():
@@ -480,7 +513,11 @@ def _staged_wait(delay, monkeypatch, *, simulate_bug):
                  "labels": rng.integers(0, 100, (2, 32))}
         _, _, rep = tr.train_step(params, opt_state, [batch])
         assert np.isfinite(rep.loss)
-        return tr.spool.stats.fetch_wait_time
+        # bytes_forwarded > 0 means a fetch was served from a store
+        # still in flight — the cold read this helper exists to time
+        # never happened, so the caller must discard the measurement
+        return (tr.spool.stats.fetch_wait_time,
+                tr.spool.stats.bytes_forwarded)
     finally:
         monkeypatch.undo()
         tr.close()
@@ -500,8 +537,20 @@ def test_backward_prefetch_covers_stage0(monkeypatch):
 
     monkeypatch.setattr(SpoolStepTransaction, "prefetch", spy)
     delay = 0.2
-    fixed_wait = _staged_wait(delay, monkeypatch, simulate_bug=False)
+    fixed_wait, _ = _staged_wait(delay, monkeypatch, simulate_bug=False)
     assert 0 in prefetched          # embed stage now prefetched
-    buggy_wait = _staged_wait(delay, monkeypatch, simulate_bug=True)
+    # The timing comparison is only meaningful when the buggy run
+    # actually pays the cold read: if the backward reaches stage 0
+    # while its store is still in flight, fetch forwards the arrays
+    # from memory (bytes_forwarded > 0) and no cold load happens at
+    # all. That race is load-dependent, so retry until a run pays it.
+    for _ in range(3):
+        buggy_wait, buggy_fwd = _staged_wait(delay, monkeypatch,
+                                             simulate_bug=True)
+        if buggy_fwd == 0:
+            break
+    else:
+        pytest.skip("stage-0 store raced every attempt: the cold-read "
+                    "path cannot be exercised under this load")
     # the buggy path pays one extra cold load on the critical path
     assert buggy_wait - fixed_wait > 0.5 * delay, (buggy_wait, fixed_wait)

@@ -65,13 +65,13 @@ def runtime():
 
 
 def _serve(runtime, kind, *, n_slots=2, requests=6, quantum=0,
-           record_logits=True):
+           record_logits=True, kv_backend="mem", io_kwargs=None):
     cfg, api, params, settings = runtime
     kvcfg = KVCacheConfig(page_tokens=8, max_seq_len=48,
                           quantum=quantum, prefetch_depth=2)
     spool = owned = None
     if kind == "paged":
-        spool, owned = build_kv_spool("mem")
+        spool, owned = build_kv_spool(kv_backend, **(io_kwargs or {}))
     try:
         server = make_server(api, params, settings, kvcfg, kind=kind,
                              n_slots=n_slots,
@@ -122,6 +122,22 @@ def test_eviction_roundtrip_parity(runtime):
     assert rp.kv["pages_evicted"] > 0
     assert rp.kv["pages_evicted"] == rp.kv["pages_restored"]
     p, d = _by_rid(sp), _by_rid(sd)
+    for rid in p:
+        assert p[rid].tokens == d[rid].tokens
+        for a, b in zip(p[rid].logits, d[rid].logits):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_managed_spool_serve_parity(runtime):
+    """Evicted pages routed through the cache-manager backend (tight
+    host bound -> real host/SSD tiering of kv_page blobs): logits stay
+    bitwise identical to the dense baseline."""
+    sp, rp = _serve(runtime, "paged", quantum=3, kv_backend="managed",
+                    io_kwargs={"host_mem_budget_bytes": 16 << 10})
+    sd, _ = _serve(runtime, "dense")
+    assert rp.kv["pages_evicted"] > 0
+    p, d = _by_rid(sp), _by_rid(sd)
+    assert set(p) == set(d)
     for rid in p:
         assert p[rid].tokens == d[rid].tokens
         for a, b in zip(p[rid].logits, d[rid].logits):

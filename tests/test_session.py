@@ -241,7 +241,7 @@ def no_offload_losses():
 
 
 @pytest.mark.parametrize("backend", ["fs", "striped", "mem", "tiered",
-                                     "aio"])
+                                     "managed", "aio"])
 @pytest.mark.parametrize("codec", ["raw", "byteplane"])
 def test_losses_bitwise_identical_across_data_planes(
         backend, codec, no_offload_losses, tmp_path):
