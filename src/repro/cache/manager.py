@@ -130,6 +130,16 @@ class CacheManager(StorageBackend):
                 name="cache-promote")
             self._promo_thread.start()
 
+    def attach_health(self, health) -> None:
+        """Report failing lower-tier (SSD) writes into a
+        `repro.resilience.BackendHealth`, so tier fallbacks show up as
+        degradation events next to spool retry failures. The fallback
+        itself already happened (the blob stayed host-resident) — this
+        only makes the demotion visible to re-planning subscribers."""
+        def note(exc: BaseException) -> None:
+            health.record_failure("write", exc)
+        self.engine.on_lower_error = note
+
     # back-compat with TieredBackend duck-typing (benchmarks, planner)
     @property
     def capacity_bytes(self) -> int:

@@ -40,7 +40,9 @@ class PlacementEngine:
     def __init__(self, upper, lower, *, capacity_bytes: int,
                  victim_fn: Optional[Callable] = None,
                  fallback_to_upper: bool = False,
-                 note_copy: Optional[Callable[[int], None]] = None):
+                 note_copy: Optional[Callable[[int], None]] = None,
+                 on_lower_error: Optional[
+                     Callable[[BaseException], None]] = None):
         if capacity_bytes < 0:
             raise ValueError("capacity_bytes must be >= 0")
         self.upper = upper
@@ -49,6 +51,8 @@ class PlacementEngine:
         self.victim_fn = victim_fn
         self.fallback_to_upper = fallback_to_upper
         self._note_copy = note_copy or (lambda n: None)
+        # failing-lower-tier observer (CacheManager feeds BackendHealth)
+        self.on_lower_error = on_lower_error
         self._lock = threading.Lock()
         self._migration_done = threading.Condition(self._lock)
         # key -> nbytes, in store order (front = default evict-first)
@@ -145,7 +149,9 @@ class PlacementEngine:
             self._lowered[key] = nbytes
         try:
             put(self.lower)
-        except Exception:
+        except Exception as e:
+            if self.on_lower_error is not None:
+                self.on_lower_error(e)
             if not self.fallback_to_upper:
                 with self._migration_done:
                     self._lowered.pop(key, None)
@@ -180,7 +186,9 @@ class PlacementEngine:
                 # write lower BEFORE deleting upper, so a concurrent
                 # read always finds the blob on one side
                 self.lower.write(k, blob)
-        except Exception:
+        except Exception as e:
+            if self.on_lower_error is not None:
+                self.on_lower_error(e)
             with self._migration_done:
                 self._spilling.discard(k)
                 killed = k in self._kill

@@ -26,6 +26,7 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -67,23 +68,71 @@ def save_checkpoint(directory: str, step: int, tree, *,
             manifest["leaves"][key]["dtype"] = "bfloat16"
         else:
             arrays[skey] = arr
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    # Crash consistency: every payload byte is fsynced before the
+    # manifest is written, the manifest is written LAST (its validity
+    # marks the checkpoint complete), and the rename that publishes the
+    # directory is made durable by fsyncing the parent. A crash at any
+    # point leaves either the old committed step or a .tmp/partial dir
+    # that `checkpoint_is_valid` rejects — never a half checkpoint that
+    # restore could pick up.
+    with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)          # atomic commit
+    _fsync_dir(directory)
     return final
 
 
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass                        # some filesystems reject dir fsync
+    finally:
+        os.close(fd)
+
+
+def checkpoint_is_valid(path: str) -> bool:
+    """True iff the committed checkpoint dir at `path` is complete: the
+    manifest parses and the npz opens with every manifest leaf present.
+    A truncated npz (crash or torn copy) fails the zip central-directory
+    check; a missing/garbled manifest fails the parse."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            names = set(data.files)
+        need = {k.replace("/", "|") for k in manifest["leaves"]}
+        return need <= names
+    except Exception:
+        return False
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Newest step whose checkpoint is COMPLETE. Partial or corrupt
+    dirs (torn copy, crash before this module fsynced the manifest) are
+    skipped with a warning, falling back to the next older valid step —
+    resume prefers losing a few steps to loading garbage."""
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and os.path.exists(os.path.join(directory, d,
-                                             "manifest.json"))]
-    return max(steps) if steps else None
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(directory)
+                    if d.startswith("step_") and not d.endswith(".tmp")),
+                   reverse=True)
+    for s in steps:
+        path = os.path.join(directory, f"step_{s:08d}")
+        if checkpoint_is_valid(path):
+            return s
+        warnings.warn(f"skipping partial/corrupt checkpoint {path}")
+    return None
 
 
 def restore_checkpoint(directory: str, tree_like, *, step: Optional[int]
@@ -93,10 +142,14 @@ def restore_checkpoint(directory: str, tree_like, *, step: Optional[int]
     shardings: optional pytree of jax.sharding.Sharding matching
     tree_like — arrays are device_put with them (elastic reshard)."""
     if step is None:
-        step = latest_step(directory)
+        step = latest_step(directory)    # skips corrupt checkpoints
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
+    if os.path.isdir(path) and not checkpoint_is_valid(path):
+        # an EXPLICITLY requested step that is broken is an error, not
+        # something to silently substitute
+        raise ValueError(f"checkpoint {path} is partial or corrupt")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))

@@ -206,10 +206,18 @@ class SpoolIoConfig:
     # --- cache-manager knobs (backend == "managed") ---
     cache_ssd: Optional[str] = None  # SSD-tier spec; None -> fs/striped
     cache_promote_depth: int = 2     # promotions per reuse-horizon hint
+    # --- resilience knobs (repro.resilience) ---
+    retry_attempts: int = 3          # total tries per spool I/O op
+    retry_backoff_s: float = 0.01    # first retry delay (doubles per try)
+    retry_backoff_max_s: float = 0.25
+    on_fetch_fail: str = "recompute"  # recompute | raise
 
     def validate(self) -> "SpoolIoConfig":
-        assert self.backend in ("fs", "striped", "mem", "tiered",
-                                "managed", "aio"), self.backend
+        # `backend` may be a bare kind or a full repro.io.factory spec
+        # string ("fault@2:striped:/a,/b"); validate the outermost kind
+        kind = self.backend.split(":", 1)[0].split("@", 1)[0]
+        assert kind in ("fs", "striped", "mem", "tiered",
+                        "managed", "aio", "fault"), self.backend
         assert self.cache_promote_depth >= 0, self.cache_promote_depth
         assert self.stripe_chunk_bytes > 0
         assert self.host_mem_budget_bytes >= 0
@@ -225,6 +233,11 @@ class SpoolIoConfig:
              f"{mmap.PAGESIZE} that mmap-backed pool buffers guarantee")
         assert self.queue_depth >= 1, self.queue_depth
         assert self.pool_bytes >= 0, self.pool_bytes
+        assert self.retry_attempts >= 1, self.retry_attempts
+        assert self.retry_backoff_s >= 0.0, self.retry_backoff_s
+        assert self.retry_backoff_max_s >= 0.0, self.retry_backoff_max_s
+        assert self.on_fetch_fail in ("recompute", "raise"), \
+            self.on_fetch_fail
         if self.backend == "striped":
             assert len(self.stripe_dirs) != 1, \
                 "striping across one directory is just 'fs'"

@@ -169,10 +169,12 @@ class HookBridge:
 
     def __init__(self, spool: ActivationSpool, *, key_prefix: str = "jit",
                  dedupe_replicas: bool = True,
-                 fetch_timeout: float = DEFAULT_FETCH_TIMEOUT_S):
+                 fetch_timeout: float = DEFAULT_FETCH_TIMEOUT_S,
+                 fetch_fallback: bool = False):
         self.spool = spool
         self.dedupe_replicas = dedupe_replicas
         self.fetch_timeout = fetch_timeout
+        self.fetch_fallback = fetch_fallback
         self._prefix = key_prefix
         self._lock = threading.RLock()
         self._cv = threading.Condition(self._lock)
@@ -194,7 +196,7 @@ class HookBridge:
         with self._lock:
             rec = self._shard_stats.setdefault(shard, {
                 "offloads": 0, "fetches": 0, "replica_skips": 0,
-                "bytes_in": 0, "bytes_out": 0})
+                "degraded_fetches": 0, "bytes_in": 0, "bytes_out": 0})
             rec[field] += n
 
     def _step_id(self, step: int, shard) -> str:
@@ -312,6 +314,44 @@ class HookBridge:
         return self.fetch(step, stage,
                           shard=shard * n_replicas + replica)
 
+    def fetch_or_fallback(self, step: int, stage: int, shapes,
+                          *, shard=None) -> Tuple[np.ndarray, ...]:
+        """Degraded-mode fetch: like `fetch` but a load failure returns
+        ``(0, *zeros)`` instead of raising, so the XLA program can branch
+        to recompute (`spooled_scan_body`'s lax.cond). On success returns
+        ``(1, *arrays)``. The branch decision is runtime data — the hook
+        trace always contains BOTH the fetch and the recompute path, and
+        this flag picks one per (step, stage) at execution time."""
+        try:
+            arrays = self.fetch(step, stage, shard=shard)
+            return (np.int32(1), *arrays)
+        except (RuntimeError, OSError, KeyError) as e:
+            self.spool.stats.fetch_fallbacks += 1
+            self._note(shard, "degraded_fetches")
+            obs.count("resilience.fetch_fallback")
+            obs.instant("resilience.fetch_fallback", cat="resilience",
+                        step=step, stage=stage, shard=shard,
+                        error=repr(e))
+            self._abort_stage(step, stage, shard)
+            zeros = tuple(np.zeros(s.shape, s.dtype) for s in shapes)
+            return (np.int32(0), *zeros)
+
+    def _abort_stage(self, step: int, stage: int, shard=None) -> None:
+        """Drop a stage whose fetch failed so the (step, shard) lease can
+        still close — the blob may be gone, `drop` tolerates that."""
+        step_id = self._step_id(step, shard)
+        with self._lock:
+            tx = self._txs.get(step_id)
+            if tx is None:
+                return
+            try:
+                tx.drop(stage)
+            except Exception:
+                pass
+            if not tx.live_stages and self._txs.get(step_id) is tx:
+                del self._txs[step_id]
+                tx.close()
+
     def close(self) -> None:
         """Drop any leftover leases (a step aborted mid-backward)."""
         with self._lock:
@@ -340,6 +380,12 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
     # pattern and the param-leaf identity test match core.staged._Stage
     cell: Dict[str, Any] = {}
     sharded = mesh is not None and mesh_size(mesh) > 1
+    # Degraded mode (single device only): the bwd callback returns an
+    # ok-flag and the trace carries BOTH the fetch and a recompute path
+    # through a lax.cond, with (p, x) saved as extra residuals. Under a
+    # mesh the recompute branch would put collectives inside cond
+    # branches — not supported, so sharded runs keep fetch-or-raise.
+    fallback = bridge.fetch_fallback and not sharded
 
     @jax.custom_vjp
     def wrapped(p, x, step, stage):
@@ -372,6 +418,19 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
             token = io_callback(offload_cb,
                                 jax.ShapeDtypeStruct((), jnp.int32),
                                 step, stage, *resid)
+            if fallback:
+                # The recompute branch re-differentiates the segment in
+                # bwd, where fn's closed-over tracers (positions, masks)
+                # would leak into the staged-out jaxpr as invalid
+                # consts. Hoist them into explicit residuals and save
+                # the closure-free converted function instead.
+                # jax.closure_convert is not enough: it only hoists
+                # perturbable (float) consts, and e.g. int32 positions
+                # still leak.
+                conv_fn, hoisted = _hoist_all_consts(fn, p, x)
+                cell["conv_fn"] = conv_fn
+                return out, (kept, step, stage, token,
+                             (p, x, hoisted))
             return out, (kept, step, stage, token)
 
         plan = plan_shards(mesh, dp_axes, tp_axis, cell["resid_shapes"])
@@ -417,17 +476,36 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
         return out, (kept, step, stage, token)
 
     def bwd(res, g):
-        kept, step, stage, token = res
+        saved_in = None
+        if fallback and len(res) == 5:
+            kept, step, stage, token, saved_in = res
+        else:
+            kept, step, stage, token = res
         leaves: List[Any] = [None] * cell["n_leaves"]
         for i, l in zip(cell["param_idx"], kept):
             leaves[i] = l
+        ok = None
         if cell["resid_idx"]:
             if not sharded:
-                def fetch_cb(step_, stage_, _token):
-                    return tuple(bridge.fetch(int(step_), int(stage_)))
+                if fallback:
+                    def fetch_cb(step_, stage_, _token):
+                        return bridge.fetch_or_fallback(
+                            int(step_), int(stage_),
+                            cell["resid_shapes"])
 
-                fetched = io_callback(fetch_cb, cell["resid_shapes"],
-                                      step, stage, token)
+                    got = io_callback(
+                        fetch_cb,
+                        (jax.ShapeDtypeStruct((), jnp.int32),
+                         *cell["resid_shapes"]),
+                        step, stage, token)
+                    ok, fetched = got[0], got[1:]
+                else:
+                    def fetch_cb(step_, stage_, _token):
+                        return tuple(bridge.fetch(int(step_),
+                                                  int(stage_)))
+
+                    fetched = io_callback(fetch_cb, cell["resid_shapes"],
+                                          step, stage, token)
             else:
                 plan = cell["plan"]
                 local_sds = plan.local_sds(cell["resid_shapes"])
@@ -451,12 +529,64 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
                                     check_vma=False)(step, stage, token)
             for i, l in zip(cell["resid_idx"], fetched):
                 leaves[i] = l
-        vjp = jax.tree.unflatten(cell["treedef"], leaves)
-        dp, dx = vjp(g)
+        if ok is not None and saved_in is not None:
+            p_saved, x_saved, hoisted = saved_in
+
+            def use_fetched(g_):
+                vjp = jax.tree.unflatten(cell["treedef"], leaves)
+                return vjp(g_)
+
+            def use_recompute(g_):
+                # re-runs the segment forward from the saved inputs and
+                # differentiates it — the zeros the failed fetch
+                # returned are never read on this branch
+                outs = jax.vjp(cell["conv_fn"], p_saved, x_saved,
+                               *hoisted)[1](g_)
+                return outs[0], outs[1]
+
+            dp, dx = jax.lax.cond(ok > 0, use_fetched, use_recompute, g)
+        else:
+            vjp = jax.tree.unflatten(cell["treedef"], leaves)
+            dp, dx = vjp(g)
         return dp, dx, jnp.zeros_like(step), jnp.zeros_like(stage)
 
     wrapped.defvjp(fwd, bwd)
     return wrapped
+
+
+def _hoist_all_consts(fn: Callable, *example_args):
+    """Closure-convert `fn`, hoisting EVERY tracer const — unlike
+    jax.closure_convert, which only hoists perturbable (float) ones.
+
+    Returns ``(conv_fn, hoisted)`` where ``conv_fn(*example_args,
+    *hoisted)`` equals ``fn(*example_args)`` but closes over no tracers,
+    so it can be re-traced inside a custom_vjp bwd rule (the degraded
+    recompute branch) without leaking the enclosing trace."""
+    flat_in, in_tree = jax.tree.flatten(example_args)
+    store: Dict[str, Any] = {}
+
+    def flat_fn(*fl):
+        out = fn(*jax.tree.unflatten(in_tree, fl))
+        out_flat, store["out_tree"] = jax.tree.flatten(out)
+        return out_flat
+
+    closed = jax.make_jaxpr(flat_fn)(*flat_in)
+    consts = list(closed.consts)
+    tracer_idx = tuple(i for i, c in enumerate(consts)
+                       if isinstance(c, jax.core.Tracer))
+    hoisted = tuple(consts[i] for i in tracer_idx)
+    n_args = len(example_args)
+
+    def conv_fn(*args):
+        trees, hs = args[:n_args], args[n_args:]
+        cs = list(consts)
+        for i, h in zip(tracer_idx, hs):
+            cs[i] = h
+        fl = jax.tree.flatten(trees)[0]
+        out_flat = jax.core.eval_jaxpr(closed.jaxpr, cs, *fl)
+        return jax.tree.unflatten(store["out_tree"], out_flat)
+
+    return conv_fn, hoisted
 
 
 def run_splits(mask: List[bool]) -> List[tuple]:

@@ -26,10 +26,19 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core.adaptive import (BWD_FACTOR, BandwidthLike, ModuleProfile,
-                                 OffloadPlan, plan_offload)
+                                 OffloadPlan, TierBandwidth, plan_offload)
 
 #: stage roles whose backward can be recomputed from the module input
 RECOMPUTABLE_ROLES = ("layer", "enc_layer")
+
+
+def _scale_bandwidths(bw: BandwidthLike, scale: float) -> BandwidthLike:
+    """Bandwidths as the planner should see them after a health event:
+    every tier's write rate scaled by `scale` (0.0 = device gone)."""
+    if isinstance(bw, (int, float)):
+        return float(bw) * scale
+    return [TierBandwidth(t.name, t.write_bw * scale, t.capacity_bytes)
+            for t in bw]
 
 
 def _is_decoder_layer(name: str) -> bool:
@@ -152,6 +161,11 @@ class AdaptivePolicy(OffloadPolicy):
         self.profiles: Optional[List[ModuleProfile]] = None
         self.bandwidths: Optional[BandwidthLike] = None
         self.cache_manager = None
+        # mid-run re-plans triggered by backend health events
+        self.replans = 0
+        self.last_health_event = None
+        import threading as _threading
+        self._replan_lock = _threading.Lock()
 
     def attach_cache_manager(self, manager) -> None:
         """Connect a `repro.cache.CacheManager` backend: after the
@@ -159,6 +173,48 @@ class AdaptivePolicy(OffloadPolicy):
         into the manager's per-class reuse distances, so tier placement
         and the offload plan derive from the same profile."""
         self.cache_manager = manager
+
+    def attach_health(self, health) -> None:
+        """Subscribe to a `repro.resilience.BackendHealth` monitor: on
+        a degrade/failing/recovered transition the policy re-plans
+        against the bandwidth the backend can still deliver (failing →
+        nothing offloads; stages degrade to on-device residuals, and
+        already-offloaded ones ride the engines' recompute fallback).
+        Tier demotion inside a managed backend needs no action here —
+        the `CacheManager.fallback_to_upper` path already re-homes
+        blobs when the SSD tier errors, and its fallback counters ride
+        the cache_* metrics block."""
+        health.subscribe(self.on_health_event)
+
+    def on_health_event(self, event) -> None:
+        """Re-plan mid-run from an I/O-worker thread. Cheap and
+        lock-protected: compute a new plan from the retained profile
+        with the degraded bandwidth, then swap the plan reference (the
+        engine reads it between stages)."""
+        from repro import obs
+        with self._replan_lock:
+            self.last_health_event = event
+            if self.profiles is None or self.bandwidths is None:
+                return      # no profile yet: nothing to re-plan from
+            if event.kind == "failing":
+                scale = 0.0  # device gone: stop offloading entirely
+            elif event.kind == "degraded":
+                scale = 1.0 / max(event.latency_ratio, 1.0)
+            else:            # recovered
+                scale = 1.0
+            self.plan = plan_offload(
+                self.profiles, _scale_bandwidths(self.bandwidths, scale),
+                bwd_factor=self.bwd_factor,
+                always_keep_last=self.always_keep_last)
+            self.replans += 1
+            n_off = sum(self.plan.offload)
+        if obs.is_enabled():
+            obs.count("resilience.replan")
+            obs.instant("resilience.replan", cat="resilience",
+                        trigger=event.kind, op=event.op,
+                        bw_scale=round(scale, 4),
+                        stages_offloaded=n_off,
+                        latency_ratio=round(event.latency_ratio, 3))
 
     @property
     def wants_profile(self) -> bool:

@@ -37,6 +37,10 @@ class StepReport:
     # deltas + residency gauges from CacheManager.metrics_delta; emitted
     # with a cache_ prefix
     cache: Optional[Dict[str, Any]] = None
+    # resilience block for this step (any spool): retry / fallback /
+    # re-plan / rebalance counter deltas plus backend-health gauges
+    # (repro.resilience); emitted with a resilience_ prefix
+    resilience: Optional[Dict[str, Any]] = None
 
     def to_metrics(self) -> Dict[str, Any]:
         """Flat JSON-able dict — the unified metrics-JSONL schema.
@@ -69,6 +73,9 @@ class StepReport:
         if self.cache:
             for k, v in self.cache.items():
                 rec[f"cache_{k}"] = v
+        if self.resilience is not None:
+            for k, v in self.resilience.items():
+                rec[f"resilience_{k}"] = v
         for k, v in self.extra.items():
             rec.setdefault(k, v)
         return rec

@@ -39,9 +39,12 @@ from repro.core.ids import TensorIdRegistry, _buffer_key
 from repro.io import (Codec, FilesystemBackend, StorageBackend,
                       encode_parts, get_codec, pack_parts, unpack,
                       unpack_aliased)
+from repro.io.backend import classify_io_error
 from repro.io.bufpool import DEFAULT_ALIGNMENT, AlignedBufferPool
 from repro.io.serde import (deserialize_leaves, serialize_leaves,
                             serialize_parts)
+from repro.resilience.health import BackendHealth
+from repro.resilience.retry import RetryPolicy
 
 # job states
 QUEUED, RUNNING, DONE, CANCELED = range(4)
@@ -60,6 +63,13 @@ def build_spool(io_config=None, *, backend=None, spool_dir=None,
     over the config's fields. Returns (spool, owned_tmpdirs) — the
     caller must rmtree the listed temp dirs on close."""
     owned = []
+    retry = None
+    if io_config is not None and hasattr(io_config, "retry_attempts"):
+        retry = RetryPolicy(
+            max_attempts=io_config.retry_attempts,
+            backoff_s=io_config.retry_backoff_s,
+            backoff_max_s=getattr(io_config, "retry_backoff_max_s",
+                                  0.25))
     if backend is None and io_config is not None:
         from repro.io import build_backend
         io_config.validate()
@@ -91,7 +101,8 @@ def build_spool(io_config=None, *, backend=None, spool_dir=None,
                               else min_offload_elements),
         pool_bytes=(256 << 20 if pool_bytes is None else pool_bytes),
         alignment=(DEFAULT_ALIGNMENT if alignment is None
-                   else alignment))
+                   else alignment),
+        retry=retry)
     return spool, owned
 
 # paper Algorithm 2 line 12: tensors smaller than 2**20 elements stay put
@@ -123,6 +134,11 @@ class SpoolStats:
     # time the *consumer* (backward pass) spent blocked waiting for a
     # load — the paper's "I/O latency exposed in the critical path".
     fetch_wait_time: float = 0.0
+    # resilience: transient-failure retries the workers rode out, and
+    # fetches the engines degraded to recompute after a lost blob
+    store_retries: int = 0
+    load_retries: int = 0
+    fetch_fallbacks: int = 0
 
     @property
     def write_bandwidth(self) -> float:
@@ -361,7 +377,9 @@ class ActivationSpool:
                  min_offload_elements: int = MIN_OFFLOAD_ELEMENTS,
                  pool: Optional[AlignedBufferPool] = None,
                  pool_bytes: int = 256 << 20,
-                 alignment: int = DEFAULT_ALIGNMENT):
+                 alignment: int = DEFAULT_ALIGNMENT,
+                 retry: Optional[RetryPolicy] = None,
+                 health: Optional[BackendHealth] = None):
         # A bare directory string keeps the seed call shape:
         # ActivationSpool("/path/to/dir") == filesystem backend there.
         if isinstance(backend, str):
@@ -389,6 +407,18 @@ class ActivationSpool:
         self.tracker = tracker or MemoryTracker()
         self.registry = registry or TensorIdRegistry()
         self.stats = SpoolStats()
+        # resilience: every backend call in the workers goes through
+        # _with_retry, which classifies failures (repro.io.backend),
+        # rides out transient ones with bounded backoff, and feeds the
+        # health monitor that AdaptivePolicy re-plans from
+        self.retry = retry or RetryPolicy()
+        self.retry.validate()
+        self.health = health or BackendHealth(self.backend.kind)
+        if self.cache_manager is not None \
+                and hasattr(self.cache_manager, "attach_health"):
+            # SSD-tier write failures inside the manager (fallback to
+            # host RAM) surface as health events next to spool retries
+            self.cache_manager.attach_health(self.health)
         self._bw = bandwidth_limit
         self._lock = threading.Lock()
         self._records: Dict[Any, Dict] = {}     # key -> record
@@ -806,6 +836,37 @@ class ActivationSpool:
 
     # --------------------------------------------------------- workers
 
+    def _with_retry(self, op: str, key, fn):
+        """Run one backend call with bounded retry/backoff on transient
+        failures; every outcome feeds the health monitor."""
+        policy = self.retry
+        attempt = 1
+        while True:
+            t0 = time.perf_counter()
+            try:
+                out = fn()
+            except BaseException as e:
+                self.health.record_failure(op, e,
+                                           time.perf_counter() - t0)
+                if (classify_io_error(e) != "transient"
+                        or attempt >= policy.max_attempts):
+                    raise
+                if op == "write":
+                    self.stats.store_retries += 1
+                else:
+                    self.stats.load_retries += 1
+                if obs.is_enabled():
+                    obs.count("resilience.retry")
+                    obs.instant("resilience.retry", cat="resilience",
+                                op=op, key=str(key), attempt=attempt,
+                                error=repr(e))
+                time.sleep(policy.delay(attempt))
+                attempt += 1
+            else:
+                self.health.record_success(op,
+                                           time.perf_counter() - t0)
+                return out
+
     def _worker(self, q: "queue.Queue[Optional[_Job]]"):
         while True:
             job = q.get()
@@ -845,7 +906,12 @@ class ActivationSpool:
                                          self.codec)
                 nbytes = sum(len(p) if not isinstance(p, memoryview)
                              else p.nbytes for p in parts)
-                self.backend.write_parts(str(job.key), parts)
+                # memoryview parts are re-readable, so a retry re-issues
+                # the same vectored write without re-encoding
+                self._with_retry(
+                    "write", job.key,
+                    lambda: self.backend.write_parts(str(job.key),
+                                                     parts))
                 dt = time.perf_counter() - t0
                 if self._bw:
                     min_t = nbytes / self._bw
@@ -893,17 +959,23 @@ class ActivationSpool:
                 # RAM-backed stores hand the blob back by reference — a
                 # pooled staging copy would only ADD a memcpy there
                 nbytes = None if self.backend.zero_copy_read \
-                    else self.backend.size(key)
+                    else self._with_retry(
+                        "read", key, lambda: self.backend.size(key))
                 if nbytes is not None and nbytes > 0:
                     lease = self.pool.acquire(nbytes)
                     try:
-                        blob = self.backend.readinto(key, lease.mv)
+                        # the leased buffer is reused across attempts: a
+                        # retried readinto just overwrites it
+                        blob = self._with_retry(
+                            "read", key,
+                            lambda: self.backend.readinto(key, lease.mv))
                     except BaseException:
                         lease.release()
                         raise
                     nread = len(blob)
                 else:
-                    blob = self.backend.read(key)
+                    blob = self._with_retry(
+                        "read", key, lambda: self.backend.read(key))
                     nread = len(blob)
                 try:
                     with obs.span("codec.decode", cat="codec", key=key):

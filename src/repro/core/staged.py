@@ -41,6 +41,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.cache.horizon import reuse_horizon
@@ -119,7 +120,8 @@ class StagedTrainer:
                  bandwidth_limit: Optional[float] = None,
                  adaptive: Optional[bool] = None,
                  num_microbatches: int = 1,
-                 min_offload_elements: Optional[int] = None):
+                 min_offload_elements: Optional[int] = None,
+                 on_fetch_fail: Optional[str] = None):
         self.api = api
         self.cfg = api.cfg
         self.settings = settings
@@ -138,6 +140,18 @@ class StagedTrainer:
             load_threads=load_threads, bandwidth_limit=bandwidth_limit,
             tracker=self.tracker,
             min_offload_elements=min_offload_elements)
+        # Degradation ladder (repro.resilience): when a residual fetch
+        # ultimately fails (blob lost, device gone), "recompute" re-runs
+        # the stage's forward from a host-RAM copy of its input kept
+        # during forward; "raise" keeps the seed behavior (the step
+        # dies). The host copy costs RAM, never device memory.
+        self.on_fetch_fail = (on_fetch_fail
+                              or getattr(io_config, "on_fetch_fail", None)
+                              or "recompute")
+        assert self.on_fetch_fail in ("recompute", "raise")
+        # mid-run re-plan: the policy watches the spool's health monitor
+        if hasattr(self.policy, "attach_health"):
+            self.policy.attach_health(self.spool.health)
         self._profiles: Optional[List[ModuleProfile]] = None
         self._stages = self._build_stages()
         self._step = 0
@@ -344,6 +358,9 @@ class StagedTrainer:
         x = xe = enc = None
         kept: Dict[int, Any] = {}
         recompute_in: Dict[int, Any] = {}
+        # offloaded stages' inputs as host numpy — the recompute
+        # fallback's raw material if the blob is later unreadable
+        fallback_in: Dict[int, Any] = {}
         loss = None
         fwd_sp = obs.span("engine.fwd", cat="engine", step=self._step,
                           mb=mb)
@@ -391,6 +408,10 @@ class StagedTrainer:
                     stage.name, _nbytes(list(r_leaves.values())), dt)
                 if self.policy.should_offload(si, profile):
                     tx.offload(si, list(r_leaves.values()))
+                    if self.on_fetch_fail == "recompute":
+                        # host copies, off the device: the footprint the
+                        # offload bought back is not spent again here
+                        fallback_in[si] = jax.tree.map(np.asarray, args)
                 else:
                     tx.keep(si, list(r_leaves.values()))
                 profiles[si] = profile
@@ -423,16 +444,40 @@ class StagedTrainer:
                                   tag=f"ckpt_done:{tx.key(si)}")
                 recompute_in.pop(si)
             else:
-                r_list = tx.fetch(si)
-                leaves = [None] * stage.cell["n_leaves"]
-                for i, l in kept[si].items():
-                    leaves[i] = l
-                for i, l in zip(stage.cell["resid_idx"], r_list):
-                    leaves[i] = l
-                outs = stage.bwd(tuple(leaves), carry_g)
-                jax.block_until_ready(outs[0])
+                try:
+                    r_list = tx.fetch(si)
+                except (RuntimeError, OSError) as e:
+                    # the blob is truly gone (retries exhausted, device
+                    # dead): degrade to recomputing this stage's forward
+                    # from the host copy of its input kept at offload
+                    # time — the bottom rung of the ladder
+                    if (self.on_fetch_fail != "recompute"
+                            or si not in fallback_in):
+                        raise
+                    self.spool.stats.fetch_fallbacks += 1
+                    if obs.is_enabled():
+                        obs.count("resilience.fetch_fallback")
+                        obs.instant("resilience.fetch_fallback",
+                                    cat="resilience", stage=stage.name,
+                                    key=tx.key(si), error=repr(e))
+                    r_list = None
+                if r_list is None:
+                    args_dev = jax.tree.map(jnp.asarray,
+                                            fallback_in.pop(si))
+                    outs = stage.bwd_recompute(stage_params[si],
+                                               args_dev, carry_g)
+                    jax.block_until_ready(outs[0])
+                else:
+                    leaves = [None] * stage.cell["n_leaves"]
+                    for i, l in kept[si].items():
+                        leaves[i] = l
+                    for i, l in zip(stage.cell["resid_idx"], r_list):
+                        leaves[i] = l
+                    outs = stage.bwd(tuple(leaves), carry_g)
+                    jax.block_until_ready(outs[0])
                 tx.drop(si)
                 kept.pop(si)
+                fallback_in.pop(si, None)
             dp, dargs = outs[0], outs[1:]
             mb_grads[si] = dp
             # ---- cotangent routing

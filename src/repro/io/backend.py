@@ -33,6 +33,7 @@ and CLI layers can select them declaratively (`build_backend`,
 from __future__ import annotations
 
 import abc
+import errno
 import os
 import threading
 import time
@@ -41,6 +42,53 @@ from typing import Dict, List, Optional, Type
 
 from repro import obs
 from repro.core.adaptive import TierBandwidth
+
+# ------------------------------------------------------- error taxonomy
+#
+# The spool's retry layer (repro.resilience) needs to know which backend
+# failures are worth a second attempt. The split follows what actually
+# recovers on real storage:
+#
+#   transient — the device is still there but momentarily unhappy
+#               (interrupted syscall, contended queue, a flaky-media
+#               EIO): a bounded retry with backoff routinely succeeds.
+#   fatal     — retrying cannot help: the blob is gone (ENOENT), the
+#               device is gone or read-only (ENODEV/EROFS/EACCES), the
+#               filesystem is out of space (ENOSPC — freeing space is a
+#               *placement* decision, not a retry), or the payload
+#               itself is malformed (serde ValueError on a torn blob).
+
+#: errno values a bounded retry may ride out
+TRANSIENT_ERRNOS = frozenset({
+    errno.EINTR, errno.EAGAIN, errno.EBUSY, errno.ETIMEDOUT, errno.EIO,
+    errno.ENOBUFS, errno.ENOMEM,
+})
+
+#: errno values where retrying the same call is provably pointless
+FATAL_ERRNOS = frozenset({
+    errno.ENOENT, errno.ENOSPC, errno.ENODEV, errno.ENXIO, errno.EROFS,
+    errno.EACCES, errno.EPERM, errno.EISDIR, errno.ENOTDIR,
+})
+
+
+def classify_io_error(exc: BaseException) -> str:
+    """Classify a backend failure as ``"transient"`` or ``"fatal"``.
+
+    Unknown `OSError`s without a listed errno default to transient (one
+    retry is cheap; losing a step is not); everything that is not an
+    OSError — serde ValueError on a truncated blob, KeyError, etc. —
+    is fatal because the bytes themselves are wrong, not the device."""
+    if isinstance(exc, FileNotFoundError):
+        return "fatal"
+    if isinstance(exc, OSError):
+        if exc.errno in FATAL_ERRNOS:
+            return "fatal"
+        if exc.errno in TRANSIENT_ERRNOS:
+            return "transient"
+        return "transient"
+    if isinstance(exc, (TimeoutError, InterruptedError)):
+        return "transient"
+    return "fatal"
 
 # Nominal sequential-write bandwidths (bytes/s) per backend kind, used by
 # dry-run projections when no measurement exists yet. fs: one datacenter

@@ -3,11 +3,13 @@ registry: filesystem (seed behavior), multi-SSD striping, host-RAM, and
 the capacity-budgeted RAM-over-SSD tier."""
 from __future__ import annotations
 
+import errno
 import os
 import threading
 import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.cache.placement import PlacementEngine
 from repro.core.adaptive import TierBandwidth
 from repro.io.backend import (StorageBackend, as_memoryviews, preadv_all,
@@ -95,18 +97,32 @@ class FilesystemBackend(StorageBackend):
 
 @register_backend("striped")
 class StripedBackend(StorageBackend):
-    """Round-robin chunk striping across N directories.
+    """Chunk striping across N directories, with capacity/health-aware
+    rebalancing.
 
     Each directory stands in for one SSD of the paper's per-GPU array
     (§3.4 uses 4x D7-P5810). A blob is split into `chunk_bytes` chunks;
-    chunk i lands on device (i % N), so sequential writes load all
-    devices evenly and reads fan out across the array. Per-device byte
-    counters feed `core.endurance.project_device_lifespans` so wear is
-    modeled per drive, not for the array as a whole.
+    chunk i *prefers* device ((crc32(key) + i) % N), so sequential
+    writes load all devices evenly and reads fan out across the array.
+    Per-device byte counters feed
+    `core.endurance.project_device_lifespans` so wear is modeled per
+    drive, not for the array as a whole.
+
+    Resilience: a chunk write that fails is retried on the next-best
+    healthy device (ordered by free bytes), and the *actual* placement
+    is recorded in the per-key manifest so reads, sizes and deletes
+    follow the chunk wherever it landed. A device accumulates
+    consecutive write failures; at `fail_threshold` it is taken out of
+    the write set (ENOSPC takes it out immediately — a full drive does
+    not get healthier by retrying). `set_device_error` is the chaos
+    seam: it makes every chunk write *and read* on that device raise,
+    as if the NVMe dropped off the bus. Wear accounting only ever
+    counts bytes that a device actually accepted.
     """
 
     def __init__(self, directories: Sequence[str], *,
-                 chunk_bytes: int = 4 << 20):
+                 chunk_bytes: int = 4 << 20,
+                 fail_threshold: int = 2):
         super().__init__()
         if not directories:
             raise ValueError("StripedBackend needs >= 1 directory")
@@ -114,13 +130,20 @@ class StripedBackend(StorageBackend):
             raise ValueError("chunk_bytes must be positive")
         self.directories = list(directories)
         self.chunk_bytes = chunk_bytes
+        self.fail_threshold = fail_threshold
         for d in self.directories:
             os.makedirs(d, exist_ok=True)
-        self.device_write_bytes = [0] * len(self.directories)
-        self.device_read_bytes = [0] * len(self.directories)
+        n = len(self.directories)
+        self.device_write_bytes = [0] * n
+        self.device_read_bytes = [0] * n
+        self.rebalanced_chunks = 0
+        self.chunk_write_failures = 0
         self._dev_lock = threading.Lock()
-        # key -> number of chunks (rebuilt by probing if missing)
-        self._manifest: Dict[str, int] = {}
+        self._fail_counts = [0] * n
+        self._down_writes = [False] * n   # out of the write set
+        self._forced_exc: Dict[int, BaseException] = {}  # chaos seam
+        # key -> device index per chunk (rebuilt by probing if missing)
+        self._manifest: Dict[str, List[int]] = {}
 
     def _device(self, key: str, i: int) -> int:
         # Start each key's round-robin at a key-dependent device (stable
@@ -130,12 +153,134 @@ class StripedBackend(StorageBackend):
         start = zlib.crc32(key.encode()) % len(self.directories)
         return (start + i) % len(self.directories)
 
+    def _path_on(self, dev: int, key: str, i: int) -> str:
+        return os.path.join(self.directories[dev], f"{key}.c{i}")
+
     def _chunk_path(self, key: str, i: int) -> str:
-        return os.path.join(self.directories[self._device(key, i)],
-                            f"{key}.c{i}")
+        # default (pre-rebalance) placement; kept for back-compat
+        return self._path_on(self._device(key, i), key, i)
+
+    # --------------------------------------------- device health seams
+
+    def set_device_error(self, dev: int, exc: BaseException) -> None:
+        """Chaos seam: device `dev` raises `exc` on every chunk write
+        and read until `clear_device_error` — a hard device loss."""
+        with self._dev_lock:
+            self._forced_exc[dev] = exc
+            self._down_writes[dev] = True
+
+    def clear_device_error(self, dev: int) -> None:
+        """The device came back: readmit it to the write set."""
+        with self._dev_lock:
+            self._forced_exc.pop(dev, None)
+            self._down_writes[dev] = False
+            self._fail_counts[dev] = 0
+
+    def devices_down(self) -> List[bool]:
+        with self._dev_lock:
+            return list(self._down_writes)
+
+    def free_device_bytes(self, dev: int) -> int:
+        """Free bytes on device `dev`'s filesystem (0 when down)."""
+        with self._dev_lock:
+            if self._down_writes[dev] or dev in self._forced_exc:
+                return 0
+        try:
+            st = os.statvfs(self.directories[dev])
+            return st.f_bavail * st.f_frsize
+        except OSError:
+            return 0
+
+    def _forced(self, dev: int) -> Optional[BaseException]:
+        with self._dev_lock:
+            exc = self._forced_exc.get(dev)
+        if exc is None:
+            return None
+        try:  # fresh instance: concurrent raisers must not share one
+            return type(exc)(*exc.args)
+        except TypeError:
+            return exc
+
+    def _note_write_failure(self, dev: int, exc: BaseException) -> None:
+        went_down = False
+        with self._dev_lock:
+            self.chunk_write_failures += 1
+            self._fail_counts[dev] += 1
+            full = (isinstance(exc, OSError)
+                    and exc.errno == errno.ENOSPC)
+            if not self._down_writes[dev] and (
+                    full or self._fail_counts[dev] >= self.fail_threshold):
+                self._down_writes[dev] = True
+                went_down = True
+        if went_down and obs.is_enabled():
+            obs.instant("resilience.device_down", cat="resilience",
+                        dev=dev, dir=self.directories[dev],
+                        error=repr(exc))
+
+    def _candidate_order(self, key: str, i: int) -> List[int]:
+        """Devices to try for chunk (key, i): the default placement
+        first if it is healthy, then the other healthy devices by free
+        bytes (fullest last). With the whole array down, fall back to
+        the default device so the caller sees the real error."""
+        default = self._device(key, i)
+        with self._dev_lock:
+            healthy = [d for d in range(len(self.directories))
+                       if not self._down_writes[d]]
+        if not healthy:
+            return [default]
+        order = [d for d in healthy if d == default]
+        rest = [d for d in healthy if d != default]
+        rest.sort(key=lambda d: (-self.free_device_bytes(d),
+                                 (d - default) % len(self.directories)))
+        return order + rest
+
+    # ------------------------------------------------------ write path
 
     def _write(self, key: str, data: bytes) -> None:
         self._write_parts(key, as_memoryviews([data]))
+
+    def _write_chunk(self, dev: int, key: str, i: int,
+                     views: List[memoryview]) -> None:
+        forced = self._forced(dev)
+        if forced is not None:
+            raise forced
+        path = self._path_on(dev, key, i)
+        fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+        try:
+            pwritev_all(fd, views)
+        except BaseException:
+            os.close(fd)
+            try:  # never leave a torn chunk for the probe to find
+                os.unlink(path)
+            except OSError:
+                pass
+            raise
+        os.close(fd)
+
+    def _place_chunk(self, key: str, i: int,
+                     views: List[memoryview]) -> int:
+        nbytes = sum(len(v) for v in views)
+        default = self._device(key, i)
+        last_exc: Optional[BaseException] = None
+        for dev in self._candidate_order(key, i):
+            try:
+                self._write_chunk(dev, key, i, views)
+            except (OSError, ValueError) as e:
+                self._note_write_failure(dev, e)
+                last_exc = e
+                continue
+            with self._dev_lock:
+                self.device_write_bytes[dev] += nbytes
+                self._fail_counts[dev] = 0
+                if dev != default:
+                    self.rebalanced_chunks += 1
+            if dev != default and obs.is_enabled():
+                obs.count("resilience.rebalance")
+                obs.instant("resilience.rebalance", cat="resilience",
+                            key=key, chunk=i, frm=default, to=dev)
+            return dev
+        assert last_exc is not None
+        raise last_exc
 
     def _write_parts(self, key: str, parts: List[memoryview]) -> None:
         # Partition the part list into per-chunk view lists: memoryview
@@ -156,63 +301,95 @@ class StripedBackend(StorageBackend):
         if len(chunks) > 1 and not chunks[-1]:
             chunks.pop()
         n = len(chunks)
+        placement: List[int] = []
         for i, views in enumerate(chunks):
-            fd = os.open(self._chunk_path(key, i),
-                         os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
-            try:
-                pwritev_all(fd, views)
-            finally:
-                os.close(fd)
-            with self._dev_lock:
-                self.device_write_bytes[self._device(key, i)] += \
-                    sum(len(v) for v in views)
+            placement.append(self._place_chunk(key, i, views))
         with self._dev_lock:
-            self._manifest[key] = n
-        # a re-write with fewer chunks must not leave the old tail
-        # behind: the probe-based reader (fresh process over the same
-        # stripe dirs) would concatenate fresh + stale chunks, and
-        # delete would leak the tail
-        i = n
-        while os.path.exists(self._chunk_path(key, i)):
-            try:
-                os.unlink(self._chunk_path(key, i))
-            except OSError:
-                pass
-            i += 1
+            self._manifest[key] = placement
+        ndirs = len(self.directories)
+        # a re-write must not leave stale copies behind: a rebalanced
+        # chunk may have MOVED devices, and a shorter blob leaves a
+        # tail — either way the probe-based reader (fresh process over
+        # the same stripe dirs) would pick up stale chunks, and delete
+        # would leak them
+        for j, dev in enumerate(placement):
+            for d in range(ndirs):
+                if d != dev:
+                    try:
+                        os.unlink(self._path_on(d, key, j))
+                    except OSError:
+                        pass
+        j = n
+        while True:
+            found = False
+            for d in range(ndirs):
+                try:
+                    os.unlink(self._path_on(d, key, j))
+                    found = True
+                except OSError:
+                    pass
+            if not found:
+                break
+            j += 1
 
-    def _num_chunks(self, key: str) -> int:
+    # ------------------------------------------------------- read path
+
+    def _locate(self, key: str, i: int,
+                dev_hint: Optional[int] = None) -> Optional[int]:
+        """Find which device holds chunk (key, i): manifest hint first,
+        then default placement, then a full probe (fresh process)."""
+        order: List[int] = []
+        for d in ([dev_hint] if dev_hint is not None else []) \
+                + [self._device(key, i)] \
+                + list(range(len(self.directories))):
+            if d not in order:
+                order.append(d)
+        for d in order:
+            if os.path.exists(self._path_on(d, key, i)):
+                return d
+        return None
+
+    def _placement(self, key: str) -> List[int]:
         with self._dev_lock:
-            n = self._manifest.get(key)
-        if n is not None:
-            return n
-        i = 0
-        while os.path.exists(self._chunk_path(key, i)):
-            i += 1
-        return i
+            p = self._manifest.get(key)
+        if p is not None:
+            return p
+        placement: List[int] = []
+        while True:
+            d = self._locate(key, len(placement))
+            if d is None:
+                return placement
+            placement.append(d)
+
+    def _read_chunk_fd(self, dev: int, key: str, i: int) -> int:
+        forced = self._forced(dev)
+        if forced is not None:
+            raise forced
+        return os.open(self._path_on(dev, key, i), os.O_RDONLY)
 
     def _read(self, key: str) -> bytes:
-        n = self._num_chunks(key)
-        if n == 0:
+        placement = self._placement(key)
+        if not placement:
             raise FileNotFoundError(key)
         parts = []
-        for i in range(n):
-            with open(self._chunk_path(key, i), "rb") as f:
+        for i, dev in enumerate(placement):
+            fd = self._read_chunk_fd(dev, key, i)
+            with os.fdopen(fd, "rb") as f:
                 chunk = f.read()
             parts.append(chunk)
             with self._dev_lock:
-                self.device_read_bytes[self._device(key, i)] += \
-                    len(chunk)
+                self.device_read_bytes[dev] += len(chunk)
         return b"".join(parts)
 
     def _readinto(self, key: str, buf: memoryview) -> int:
         """Gather the stripe chunks directly into successive slices of
         the caller's buffer — no per-chunk bytes objects, no join."""
-        n = self._num_chunks(key)
-        if n == 0:
+        placement = self._placement(key)
+        if not placement:
             raise FileNotFoundError(key)
         off = 0
-        for i in range(n):
-            fd = os.open(self._chunk_path(key, i), os.O_RDONLY)
+        for i, dev in enumerate(placement):
+            fd = self._read_chunk_fd(dev, key, i)
             try:
                 sz = os.fstat(fd).st_size
                 if off + sz > len(buf):
@@ -226,31 +403,38 @@ class StripedBackend(StorageBackend):
             finally:
                 os.close(fd)
             with self._dev_lock:
-                self.device_read_bytes[self._device(key, i)] += sz
+                self.device_read_bytes[dev] += sz
             off += sz
         return off
 
     def _size(self, key: str) -> Optional[int]:
-        n = self._num_chunks(key)
-        if n == 0:
+        placement = self._placement(key)
+        if not placement:
             return None
         total = 0
-        for i in range(n):
+        for i, dev in enumerate(placement):
             try:
-                total += os.stat(self._chunk_path(key, i)).st_size
+                total += os.stat(self._path_on(dev, key, i)).st_size
             except OSError:
                 return None
         return total
 
     def _delete(self, key: str) -> None:
-        n = self._num_chunks(key)
         with self._dev_lock:
             self._manifest.pop(key, None)
-        for i in range(n):
-            try:
-                os.unlink(self._chunk_path(key, i))
-            except OSError:
-                pass
+        ndirs = len(self.directories)
+        i = 0
+        while True:  # probe-based: catches stale/moved copies too
+            found = False
+            for d in range(ndirs):
+                try:
+                    os.unlink(self._path_on(d, key, i))
+                    found = True
+                except OSError:
+                    pass
+            if not found:
+                break
+            i += 1
 
     def per_device_write_bytes(self) -> List[int]:
         with self._dev_lock:

@@ -148,6 +148,12 @@ def build_backend(io_cfg, *,
     """Construct a backend from a `repro.configs.base.SpoolIoConfig`
     (duck-typed so `repro.io` stays import-independent of configs)."""
     kind = io_cfg.backend
+    if ":" in kind or "@" in kind or kind == "fault":
+        # full spec string ("fault@2:striped:/a,/b") — the spec grammar
+        # subsumes every per-field knob except the chunk/budget ones,
+        # which specs carry inline
+        return backend_from_spec(kind,
+                                 base_dir=io_cfg.directory or default_dir)
     get_backend_cls(kind)
     created: List[str] = []
 

@@ -62,11 +62,12 @@ def main() -> None:
                     help="min elements to offload through the spool "
                          "(default: paper's 2**20)")
     ap.add_argument("--spool-backend", default="fs",
-                    choices=["fs", "striped", "mem", "tiered",
-                             "managed", "aio"],
                     help="storage backend for the activation spool "
-                         "(repro.io); honored by BOTH engines. 'aio' "
-                         "is the O_DIRECT zero-copy data plane; "
+                         "(repro.io); honored by BOTH engines. A bare "
+                         "kind (fs|striped|mem|tiered|managed|aio) or a "
+                         "full repro.io spec string like "
+                         "'fault@3:striped@2' or 'tiered:64mb,aio'. "
+                         "'aio' is the O_DIRECT zero-copy data plane; "
                          "'managed' is the repro.cache storage brain "
                          "(see the --cache-* family)")
     ap.add_argument("--spool-dir", default=None,
@@ -113,6 +114,19 @@ def main() -> None:
                     help="mesh activation offload: store one residual "
                          "copy PER DEVICE instead of one per replica "
                          "group (debugging / bandwidth experiments)")
+    ap.add_argument("--retry-attempts", type=int, default=3,
+                    help="resilience: total tries per spool I/O op "
+                         "before the failure surfaces (1 disables "
+                         "retry)")
+    ap.add_argument("--retry-backoff-ms", type=float, default=10.0,
+                    help="resilience: first retry delay in ms; doubles "
+                         "per attempt, capped at 250 ms")
+    ap.add_argument("--on-fetch-fail", default="recompute",
+                    choices=["recompute", "raise"],
+                    help="resilience: when a residual fetch ultimately "
+                         "fails after retries, recompute the segment "
+                         "from kept inputs (default) or raise and kill "
+                         "the step")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable repro.obs tracing and write a Chrome/"
                          "Perfetto trace-event JSON here on exit "
@@ -162,6 +176,9 @@ def main() -> None:
         alignment=args.spool_align,
         queue_depth=args.spool_queue_depth,
         pool_bytes=args.spool_pool_mb << 20,
+        retry_attempts=args.retry_attempts,
+        retry_backoff_s=args.retry_backoff_ms / 1e3,
+        on_fetch_fail=args.on_fetch_fail,
         **cache_ov)
 
     # the context manager guarantees teardown (worker-thread join, temp
@@ -223,6 +240,13 @@ def main() -> None:
                 per_dev = bk.per_device_write_bytes()
                 print("stripe write balance:",
                       [f"{b/1e6:.1f}MB" for b in per_dev], flush=True)
+            rs = session.spool.stats
+            if rs.store_retries or rs.load_retries or rs.fetch_fallbacks:
+                print(f"resilience: {rs.store_retries} store retries, "
+                      f"{rs.load_retries} load retries, "
+                      f"{rs.fetch_fallbacks} recompute fallbacks; "
+                      f"backend health={session.spool.health.status}",
+                      flush=True)
         if args.trace:
             last_obs = next((r.obs for r in reversed(result.reports)
                              if r.obs), None)

@@ -1,0 +1,36 @@
+"""repro.resilience — ride through a dying SSD.
+
+The paper's endurance analysis (§VII) makes SSD wear-out a *planned*
+event on long pretraining runs, so the data plane has to treat device
+degradation as a normal operating mode, not an exception. This package
+is the fault-riding layer:
+
+  RetryPolicy    — bounded exponential backoff for transient I/O errors
+                   (classified by repro.io.backend.classify_io_error);
+                   the spool's store/load workers wrap every backend
+                   call in it.
+  BackendHealth  — per-backend health monitor: consecutive-failure and
+                   latency-degradation tracking, with state-transition
+                   events ("degraded" / "failing" / "recovered") pushed
+                   to subscribers. AdaptivePolicy subscribes and
+                   re-plans mid-run when the backend sours.
+  ChaosHarness   — test/ops driver that scripts faults against a live
+                   backend stack (kill a stripe device, flaky writes,
+                   raising reads, ENOSPC) and aggregates the injected
+                   counters the chaos tests assert on.
+
+The degradation ladder, end to end: healthy offload → retry/backoff →
+stripe rebalancing away from the sick device → tier fallback (managed
+backend) → recompute-from-kept-inputs when a residual is truly lost.
+"""
+from repro.resilience.chaos import ChaosHarness, unwrap_chain
+from repro.resilience.health import BackendHealth, HealthEvent
+from repro.resilience.retry import RetryPolicy
+
+__all__ = [
+    "BackendHealth",
+    "ChaosHarness",
+    "HealthEvent",
+    "RetryPolicy",
+    "unwrap_chain",
+]

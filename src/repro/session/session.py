@@ -196,6 +196,7 @@ class TrainSession:
         self._obs_cursor = None
         self._counters_snapshot: dict = {}
         self._cache_snapshot = None
+        self._resil_snapshot: dict = {}
 
         if loader is None:
             loader = ShardedLoader(
@@ -267,7 +268,10 @@ class TrainSession:
                 self._hook_bridge = HookBridge(
                     self.spool,
                     dedupe_replicas=(self.io.dedupe_replicas
-                                     if self.io is not None else True))
+                                     if self.io is not None else True),
+                    fetch_fallback=(
+                        getattr(self.io, "on_fetch_fail", "recompute")
+                        == "recompute" if self.io is not None else True))
                 self.settings = dataclasses.replace(
                     self.settings, hook_bridge=self._hook_bridge)
             self._step_fn = make_host_train_step(
@@ -376,7 +380,48 @@ class TrainSession:
         if cm is not None:
             cache_delta, self._cache_snapshot = \
                 cm.metrics_delta(self._cache_snapshot)
-        return stats_delta, shard_delta, obs_delta, cache_delta
+        resil_delta = self._resilience_delta()
+        return (stats_delta, shard_delta, obs_delta, cache_delta,
+                resil_delta)
+
+    #: resilience counters that grow monotonically and are emitted as
+    #: per-step differences (gauges like health ride along un-diffed)
+    _RESIL_MONOTONIC = ("store_retries", "load_retries",
+                        "fetch_fallbacks", "replans",
+                        "rebalanced_chunks", "chunk_write_failures")
+
+    def _resilience_delta(self):
+        """Per-step resilience block: retry / fallback / re-plan /
+        rebalance counter deltas plus current backend-health gauges.
+        Present on every step that has a spool (zeros on healthy runs),
+        so consumers can rely on the columns existing."""
+        if self.spool is None:
+            return None
+        from repro.resilience import unwrap_chain
+        cur: dict = {}
+        st = self.spool.stats
+        cur["store_retries"] = st.store_retries
+        cur["load_retries"] = st.load_retries
+        cur["fetch_fallbacks"] = st.fetch_fallbacks
+        if self.policy is not None and hasattr(self.policy, "replans"):
+            cur["replans"] = self.policy.replans
+        for b in unwrap_chain(self.spool.backend):
+            if hasattr(b, "rebalanced_chunks"):
+                cur["rebalanced_chunks"] = b.rebalanced_chunks
+                cur["chunk_write_failures"] = b.chunk_write_failures
+                break
+        prev = self._resil_snapshot
+        delta = {k: v - prev.get(k, 0) for k, v in cur.items()
+                 if k in self._RESIL_MONOTONIC}
+        self._resil_snapshot = cur
+        health = getattr(self.spool, "health", None)
+        if health is not None:
+            delta["health"] = health.snapshot()["health"]
+        for b in unwrap_chain(self.spool.backend):
+            if hasattr(b, "devices_down"):
+                delta["devices_down"] = sum(b.devices_down())
+                break
+        return delta
 
     def _emit(self, rep: StepReport,
               on_report: Optional[Callable]) -> None:
@@ -419,8 +464,8 @@ class TrainSession:
                 params, opt_state, batches)
             step += 1
             rep.step = step
-            rep.stats, rep.shard_stats, rep.obs, rep.cache = \
-                self._step_deltas()
+            (rep.stats, rep.shard_stats, rep.obs, rep.cache,
+             rep.resilience) = self._step_deltas()
             tokens = sum(_batch_tokens(b) for b in batches)
             rep.tokens_per_s = tokens / rep.step_time \
                 if rep.step_time else 0.0
@@ -441,14 +486,15 @@ class TrainSession:
                     extra[k] = float(v)
                 except (TypeError, ValueError):
                     pass
-            stats_d, shard_d, obs_d, cache_d = self._step_deltas()
+            stats_d, shard_d, obs_d, cache_d, resil_d = \
+                self._step_deltas()
             rep = StepReport(
                 loss=extra.get("loss", float("nan")),
                 step_time=dt, step=step, engine="jit",
                 stats=stats_d,
                 tokens_per_s=tokens / dt if dt else 0.0,
                 extra=extra, obs=obs_d, shard_stats=shard_d,
-                cache=cache_d)
+                cache=cache_d, resilience=resil_d)
             self._emit(rep, on_report)
 
         if self._loop is None:

@@ -1,0 +1,597 @@
+"""Resilience subsystem tests (`repro.resilience` + its wiring).
+
+The degradation ladder under a dying SSD, bottom to top:
+
+  1. transient I/O errors are retried with bounded backoff (exact
+     attempt accounting against the fault injector's counters);
+  2. a stripe device that hard-fails stops receiving writes — chunks
+     rebalance onto surviving devices with wear accounting intact;
+  3. a residual fetch that ultimately fails degrades to recomputing
+     the segment from kept inputs, in BOTH engines (staged try/except
+     and the jit hooks' lax.cond ok-flag branch), at loss/grad parity;
+  4. health transitions re-plan the adaptive offload policy mid-run;
+  5. the chaos end-to-end: a device dies mid-training, every step
+     completes, and the final losses match a healthy run.
+
+Checkpoint crash-consistency (fsync + manifest-last + skip-corrupt
+restore) rides along: it is the recovery story's other half.
+"""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import (checkpoint_is_valid, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs.base import SpoolIoConfig
+from repro.core.adaptive import ModuleProfile
+from repro.core.endurance import project_device_lifespans
+from repro.core.hooks import HookBridge, spooled_scan_body
+from repro.core.policies import AdaptivePolicy
+from repro.core.spool import ActivationSpool
+from repro.io import (FaultInjectingBackend, FilesystemBackend,
+                      HostMemoryBackend, StripedBackend,
+                      backend_from_spec)
+from repro.io.backend import classify_io_error
+from repro.resilience import (BackendHealth, ChaosHarness, HealthEvent,
+                              RetryPolicy, unwrap_chain)
+
+MIN_OFF = 4
+
+
+def _tree(rng, n=4096):
+    return {"a": rng.normal(size=(n,)).astype(np.float32),
+            "b": rng.normal(size=(n, 2)).astype(np.float32)}
+
+
+def _assert_tree_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def _spool(backend, **kw):
+    kw.setdefault("min_offload_elements", MIN_OFF)
+    kw.setdefault("store_threads", 1)
+    kw.setdefault("load_threads", 1)
+    return ActivationSpool(backend, **kw)
+
+
+def _fast_retry(**kw):
+    kw.setdefault("backoff_s", 1e-4)
+    kw.setdefault("backoff_max_s", 1e-3)
+    return RetryPolicy(**kw)
+
+
+# =================================================== taxonomy + policy
+
+def test_error_taxonomy():
+    import errno
+    assert classify_io_error(OSError(errno.EIO, "io")) == "transient"
+    assert classify_io_error(OSError(errno.EAGAIN, "again")) == "transient"
+    assert classify_io_error(TimeoutError()) == "transient"
+    assert classify_io_error(OSError(errno.ENOSPC, "full")) == "fatal"
+    assert classify_io_error(OSError(errno.ENODEV, "gone")) == "fatal"
+    assert classify_io_error(FileNotFoundError("x")) == "fatal"
+    assert classify_io_error(ValueError("bad serde")) == "fatal"
+    # unknown-errno OSErrors get the benefit of the doubt
+    assert classify_io_error(OSError("mystery")) == "transient"
+
+
+def test_retry_policy_backoff_schedule():
+    p = RetryPolicy(max_attempts=4, backoff_s=0.01, backoff_factor=2.0,
+                    backoff_max_s=0.025)
+    assert [p.delay(a) for a in (1, 2, 3)] == [0.01, 0.02, 0.025]
+    with pytest.raises(AssertionError):
+        RetryPolicy(max_attempts=0).validate()
+
+
+def test_backend_health_transitions_and_events():
+    h = BackendHealth("t", fail_threshold=2, min_samples=2,
+                      degrade_latency_ratio=2.0)
+    events = []
+    h.subscribe(events.append)
+    exc = OSError(5, "boom")
+    assert h.status == "healthy"
+    h.record_failure("write", exc)
+    assert h.status == "healthy"            # below threshold
+    h.record_failure("write", exc)
+    assert h.status == "failing"
+    assert [e.kind for e in events] == ["failing"]
+    h.record_success("write", 0.001)
+    assert h.status == "healthy"
+    assert [e.kind for e in events] == ["failing", "recovered"]
+    # latency degradation: baseline from first 2 samples, then slow ones
+    for _ in range(2):
+        h.record_success("read", 0.001)
+    for _ in range(6):
+        h.record_success("read", 0.1)
+    assert h.status == "degraded"
+    assert any(e.kind == "degraded" and e.op == "read" for e in events)
+    snap = h.snapshot()
+    assert snap["health"] == 1 and snap["read_latency_ratio"] > 2.0
+
+
+def test_health_subscriber_exceptions_are_swallowed():
+    h = BackendHealth("t", fail_threshold=1)
+    h.subscribe(lambda e: (_ for _ in ()).throw(RuntimeError("bad sub")))
+    h.record_failure("write", OSError(5, "x"))   # must not raise
+    assert h.status == "failing"
+
+
+# ============================================== spool retry accounting
+
+def test_transient_store_retry_exact_accounting():
+    """Two armed transient write failures: the store succeeds on the
+    3rd attempt, stats count exactly 2 retries, the injector exactly 2
+    injections, and the fetch is a real backend load (no forwarding)."""
+    bk = FaultInjectingBackend(HostMemoryBackend(), fail_writes=2)
+    spool = _spool(bk, retry=_fast_retry())
+    rng = np.random.default_rng(0)
+    tree = _tree(rng)
+    with spool.step("mb0") as tx:
+        tx.offload(0, tree)
+        spool.wait_io()
+        assert bk.injected["write_failures"] == 2
+        assert spool.stats.store_retries == 2
+        assert spool.stats.num_stores == 1
+        assert bk.inner.stats.num_writes == 1
+        _assert_tree_equal(tree, tx.fetch(0))
+        tx.drop(0)
+    assert spool.stats.bytes_forwarded == 0
+    assert spool.health.status == "healthy"     # success reset the op
+    spool.close()
+
+
+def test_transient_load_retry_exact_accounting(tmp_path):
+    bk = FaultInjectingBackend(FilesystemBackend(str(tmp_path)))
+    spool = _spool(bk, retry=_fast_retry())
+    rng = np.random.default_rng(1)
+    tree = _tree(rng)
+    with spool.step("mb0") as tx:
+        tx.offload(0, tree)
+        spool.wait_io()
+        bk.arm_read_failures(2)
+        _assert_tree_equal(tree, tx.fetch(0))
+        tx.drop(0)
+    assert bk.injected["read_failures"] == 2
+    assert spool.stats.load_retries == 2
+    spool.close()
+
+
+def test_exhausted_retries_surface_and_feed_health():
+    """More consecutive failures than attempts: the store really fails
+    (forwarding saves the step), with exactly max_attempts injections,
+    and the health monitor transitions to failing."""
+    bk = FaultInjectingBackend(HostMemoryBackend(), fail_writes=100)
+    spool = _spool(bk, retry=_fast_retry(max_attempts=3))
+    events = []
+    spool.health.subscribe(events.append)
+    rng = np.random.default_rng(2)
+    tree = _tree(rng)
+    with spool.step("mb0") as tx:
+        tx.offload(0, tree)
+        spool.wait_io()
+        assert bk.injected["write_failures"] == 3   # exactly max_attempts
+        assert spool.stats.store_retries == 2
+        _assert_tree_equal(tree, tx.fetch(0))        # forwarded, not lost
+        tx.drop(0)
+    assert spool.health.status == "failing"
+    assert any(e.kind == "failing" for e in events)
+    spool.close()
+
+
+def test_fatal_error_not_retried():
+    bk = FaultInjectingBackend(
+        HostMemoryBackend(), fail_writes=1,
+        write_exc=OSError(28, "No space left on device"))
+    spool = _spool(bk, retry=_fast_retry())
+    rng = np.random.default_rng(3)
+    with spool.step("mb0") as tx:
+        tx.offload(0, _tree(rng))
+        spool.wait_io()
+        assert bk.injected["write_failures"] == 1   # one try, no retry
+        assert spool.stats.store_retries == 0
+        tx.drop(0)
+    spool.close()
+
+
+# ================================================ new fault primitives
+
+def test_intermittent_faults_are_seeded_and_reproducible():
+    def run(seed):
+        bk = FaultInjectingBackend(HostMemoryBackend(),
+                                   intermittent_rate=0.5,
+                                   intermittent_seed=seed)
+        outcomes = []
+        for i in range(32):
+            try:
+                bk.write(f"k{i}", b"x" * 16)
+                outcomes.append(True)
+            except OSError:
+                outcomes.append(False)
+        n = bk.injected["intermittent_failures"]
+        bk.close()
+        return outcomes, n
+    a, na = run(7)
+    b, _ = run(7)
+    c, _ = run(8)
+    assert a == b                      # same seed, same fault schedule
+    assert a != c                      # different seed differs
+    assert any(a) and not all(a)       # actually intermittent
+    assert na == a.count(False)
+
+
+def test_enospc_after_budget():
+    bk = FaultInjectingBackend(HostMemoryBackend(),
+                               enospc_after_bytes=100)
+    bk.write("a", b"x" * 60)
+    bk.write("b", b"x" * 60)           # budget crossed by this write
+    with pytest.raises(OSError) as ei:
+        bk.write("c", b"x" * 10)       # ...so this one is refused
+    assert ei.value.errno == 28
+    assert bk.injected["enospc_failures"] == 1
+    bk.close()
+
+
+def test_fault_device_scoping_on_stripe(tmp_path):
+    dirs = [str(tmp_path / f"d{i}") for i in range(2)]
+    striped = StripedBackend(dirs, chunk_bytes=64)
+    bk = FaultInjectingBackend(striped)
+    # find keys whose stripe placement starts on each device
+    k0 = next(f"k{i}" for i in range(64) if striped._device(f"k{i}", 0) == 0)
+    k1 = next(f"k{i}" for i in range(64) if striped._device(f"k{i}", 0) == 1)
+    bk.arm_write_failures(100, device=1)
+    bk.write(k0, b"x" * 32)            # device-0 key unaffected
+    with pytest.raises(OSError):
+        bk.write(k1, b"x" * 32)
+    assert bk.injected["write_failures"] == 1
+    bk.close()
+
+
+# =========================================== striped rebalance + wear
+
+def test_striped_rebalance_avoids_dead_device(tmp_path):
+    dirs = [str(tmp_path / f"d{i}") for i in range(3)]
+    bk = StripedBackend(dirs, chunk_bytes=64)
+    harness = ChaosHarness(bk)
+    payload = os.urandom(64 * 6)       # 6 chunks over 3 devices
+    bk.write("warm", payload)
+    assert bk.read("warm") == payload
+    harness.kill_device(1)
+    # new writes must not touch device 1; reads of them succeed
+    for i in range(4):
+        key = f"post{i}"
+        bk.write(key, payload)
+        assert 1 not in bk._placement(key)
+        assert bk.read(key) == payload
+    assert bk.rebalanced_chunks >= 8   # 2 dev-1 chunks per post blob
+    assert sum(bk.devices_down()) == 1
+    # wear accounting: only bytes a device actually ACCEPTED count,
+    # and the totals cover every blob stored
+    per_dev = bk.per_device_write_bytes()
+    assert per_dev[1] == len(payload) // 3   # only the pre-kill share
+    assert sum(per_dev) == len(payload) * 5
+    # endurance projection consumes the same counters unchanged
+    wear = project_device_lifespans(per_dev, 10.0)
+    assert len(wear) == 3
+    # heal: the device rejoins the write set
+    harness.heal_device(1)
+    assert sum(bk.devices_down()) == 0
+    bk.write("healed", payload)
+    assert bk.read("healed") == payload
+    bk.close()
+
+
+def test_striped_read_of_dead_device_chunk_raises(tmp_path):
+    """Chunks already ON a device that dies are unreadable — that is
+    the failure the spool retries and the engines recompute around."""
+    dirs = [str(tmp_path / f"d{i}") for i in range(2)]
+    bk = StripedBackend(dirs, chunk_bytes=64)
+    payload = os.urandom(64 * 4)
+    bk.write("k", payload)
+    ChaosHarness(bk).kill_device(0)
+    with pytest.raises(OSError):
+        bk.read("k")                   # some chunk lives on device 0
+    bk.close()
+
+
+def test_striped_write_failures_down_device_at_threshold(tmp_path,
+                                                         monkeypatch):
+    """Consecutive chunk-write failures take the device out of the
+    write set at fail_threshold; wear counts only accepted bytes."""
+    dirs = [str(tmp_path / f"d{i}") for i in range(2)]
+    bk = StripedBackend(dirs, chunk_bytes=64, fail_threshold=2)
+    real = bk._write_chunk
+    fails = {"n": 0}
+
+    def flaky(dev, key, i, views):
+        if dev == 0 and fails["n"] < 2:
+            fails["n"] += 1
+            raise OSError(5, "injected chunk failure")
+        return real(dev, key, i, views)
+
+    monkeypatch.setattr(bk, "_write_chunk", flaky)
+    k1 = next(f"k{i}" for i in range(64) if bk._device(f"k{i}", 0) == 0)
+    k2 = next(f"j{i}" for i in range(64) if bk._device(f"j{i}", 0) == 0)
+    bk.write(k1, b"x" * 64)            # retried onto device 1
+    assert bk.chunk_write_failures == 1
+    assert not any(bk.devices_down())  # one failure: not down yet
+    assert bk.rebalanced_chunks == 1
+    bk.write(k2, b"z" * 64)            # second consecutive failure
+    assert bk.chunk_write_failures == 2
+    assert bk.devices_down()[0]        # threshold reached: downed
+    assert bk.per_device_write_bytes()[0] == 0
+    assert bk.read(k1) == b"x" * 64    # data followed the rebalance
+    bk.close()
+
+
+# ======================================== engine degradation: staged
+
+def _staged_session(io, **kw):
+    from repro.session import TrainSession
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("seq_len", 32)
+    kw.setdefault("seed", 0)
+    kw.setdefault("min_offload_elements", 0)
+    return TrainSession("small-gpt", engine="staged", policy="spool",
+                        io=io, **kw)
+
+
+def test_staged_fetch_failure_recomputes_at_loss_parity():
+    """Arm unrecoverable read failures after step 1: every later fetch
+    exhausts its retries and degrades to recompute-from-kept-inputs.
+    Forward math is untouched and the recompute branch re-derives the
+    same gradients, so the loss trajectory matches a healthy run."""
+    def run(chaos):
+        io = SpoolIoConfig(backend="fault:fs", retry_attempts=2,
+                           retry_backoff_s=1e-3)
+        with _staged_session(io) as sess:
+            losses = list(sess.run(1).losses)
+            if chaos:
+                sess.spool.backend.arm_read_failures(10_000)
+            losses += sess.run(2).losses
+            stats = sess.spool.stats.snapshot()
+            injected = dict(sess.spool.backend.injected)
+        return losses, stats, injected
+
+    healthy, _, _ = run(False)
+    degraded, stats, injected = run(True)
+    assert injected["read_failures"] > 0
+    assert stats.fetch_fallbacks > 0, "recompute fallback never fired"
+    assert stats.load_retries > 0, "retry path never exercised"
+    assert len(degraded) == 3 and all(np.isfinite(degraded))
+    np.testing.assert_allclose(degraded, healthy, rtol=1e-3)
+
+
+def test_staged_on_fetch_fail_raise_mode():
+    """on_fetch_fail='raise' keeps the seed behavior: an unreadable
+    residual blob kills the step instead of degrading."""
+    io = SpoolIoConfig(backend="fault:fs", retry_attempts=1,
+                       retry_backoff_s=1e-3, on_fetch_fail="raise")
+    with _staged_session(io) as sess:
+        assert sess.trainer.on_fetch_fail == "raise"
+        sess.run(1)                    # healthy step works
+        sess.spool.backend.arm_read_failures(10_000)
+        with pytest.raises((RuntimeError, OSError)):
+            sess.run(1)
+        sess.spool.backend.arm_read_failures(0)
+
+
+# =========================================== engine degradation: jit
+
+def test_hook_fallback_grads_match_reference():
+    fb = FaultInjectingBackend(HostMemoryBackend())
+    spool = _spool(fb, min_offload_elements=0, retry=_fast_retry())
+    bridge = HookBridge(spool, fetch_fallback=True)
+    # force stores to COMPLETE before backward so the fetch must hit
+    # the backend (defeats §3.3.2 tensor forwarding for this test)
+    orig = bridge.offload
+
+    def offload_sync(step, stage, arrays, **kw):
+        orig(step, stage, arrays, **kw)
+        spool.wait_io()
+
+    bridge.offload = offload_sync
+
+    def fn(p, x):
+        return jnp.tanh(x @ p["w"] + p["b"])
+
+    wrapped = spooled_scan_body(fn, bridge)
+    rng = np.random.RandomState(0)
+    p = {"w": jnp.asarray(rng.randn(4, 4), jnp.float32),
+         "b": jnp.ones((4,), jnp.float32)}
+    x = jnp.asarray(rng.randn(2, 4), jnp.float32)
+
+    @jax.jit
+    def gradf(p, x, step):
+        return jax.grad(lambda p: jnp.sum(
+            wrapped(p, x, step, jnp.float32(0)) ** 2))(p)
+
+    ref = jax.grad(lambda p: jnp.sum(fn(p, x) ** 2))(p)
+    g1 = gradf(p, x, jnp.float32(0.0))       # healthy: fetched branch
+    for k in ref:
+        np.testing.assert_allclose(g1[k], ref[k], rtol=1e-5)
+    assert spool.stats.fetch_fallbacks == 0
+
+    fb.arm_read_failures(10_000)             # device gone: cond flips
+    g2 = gradf(p, x, jnp.float32(1.0))
+    for k in ref:
+        np.testing.assert_allclose(g2[k], ref[k], rtol=1e-5)
+    assert spool.stats.fetch_fallbacks == 1
+    assert bridge.stats_by_shard()[None]["degraded_fetches"] == 1
+    # the aborted stage's lease was cleaned up: no leaked transactions
+    assert not bridge._txs
+    bridge.close()
+    spool.close()
+
+
+def test_hook_without_fallback_keeps_default_semantics():
+    fb = FaultInjectingBackend(HostMemoryBackend())
+    spool = _spool(fb, min_offload_elements=0, retry=_fast_retry())
+    bridge = HookBridge(spool)               # fetch_fallback=False
+    assert not bridge.fetch_fallback
+
+    def fn(p, x):
+        return jnp.tanh(x @ p["w"])
+
+    wrapped = spooled_scan_body(fn, bridge)
+    p = {"w": jnp.eye(4, dtype=jnp.float32)}
+    x = jnp.ones((2, 4), jnp.float32)
+
+    @jax.jit
+    def gradf(p, x, step):
+        return jax.grad(lambda p: jnp.sum(
+            wrapped(p, x, step, jnp.float32(0)) ** 2))(p)
+
+    g = gradf(p, x, jnp.float32(0.0))        # healthy pass works
+    assert np.isfinite(np.asarray(g["w"]).sum())
+    bridge.close()
+    spool.close()
+
+
+# =================================================== mid-run re-plan
+
+def _profiles():
+    return [ModuleProfile(f"seg0_l{i}", 64 << 20, 0.05) for i in range(4)]
+
+
+def test_adaptive_replan_on_bandwidth_collapse():
+    pol = AdaptivePolicy()
+    pol.on_profile(_profiles(), 8e9)       # plenty of bandwidth
+    n0 = sum(pol.plan.offload)
+    assert n0 > 0
+    h = BackendHealth("fs", fail_threshold=2)
+    pol.attach_health(h)
+    exc = OSError(5, "dying ssd")
+    h.record_failure("write", exc)
+    h.record_failure("write", exc)         # -> failing event
+    assert pol.replans == 1
+    assert sum(pol.plan.offload) == 0      # device gone: stop offloading
+    assert pol.last_health_event.kind == "failing"
+    # recovery re-plans back up to the original plan
+    h.record_success("write", 0.001)
+    assert pol.replans == 2
+    assert sum(pol.plan.offload) == n0
+
+
+def test_adaptive_replan_scales_with_latency_degradation():
+    pol = AdaptivePolicy()
+    pol.on_profile(_profiles(), 2e9)
+    n0 = sum(pol.plan.offload)
+    assert n0 > 0
+    pol.on_health_event(HealthEvent(
+        kind="degraded", backend="fs", op="write",
+        consecutive_failures=0, latency_ratio=100.0))
+    assert pol.replans == 1
+    assert sum(pol.plan.offload) < n0      # 1/100th of the bandwidth
+
+
+def test_replan_before_profile_is_a_noop():
+    pol = AdaptivePolicy()
+    pol.on_health_event(HealthEvent(
+        kind="failing", backend="fs", op="write",
+        consecutive_failures=3, latency_ratio=1.0))
+    assert pol.replans == 0 and pol.plan is None
+
+
+# ====================================== checkpoint crash consistency
+
+def test_checkpoint_truncated_blob_skipped_on_restore(tmp_path):
+    d = str(tmp_path)
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    save_checkpoint(d, 1, tree)
+    save_checkpoint(d, 2, {"w": tree["w"] + 1})
+    npz = os.path.join(d, "step_00000002", "arrays.npz")
+    with open(npz, "rb") as f:
+        blob = f.read()
+    with open(npz, "wb") as f:
+        f.write(blob[:len(blob) // 2])     # torn write / crashed copy
+    assert not checkpoint_is_valid(os.path.join(d, "step_00000002"))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert latest_step(d) == 1
+        assert any("corrupt" in str(x.message) for x in w)
+    restored, manifest = restore_checkpoint(
+        d, {"w": np.zeros((3, 4), np.float32)})
+    assert manifest["step"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+    # an explicitly requested broken step is an error, never a silent
+    # substitute
+    with pytest.raises(ValueError, match="partial or corrupt"):
+        restore_checkpoint(d, tree, step=2)
+
+
+def test_checkpoint_missing_manifest_is_invalid(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 5, {"w": np.ones(3, np.float32)})
+    os.unlink(os.path.join(d, "step_00000005", "manifest.json"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert latest_step(d) is None
+
+
+# ================================================== chaos end to end
+
+def test_chaos_device_death_mid_run_end_to_end(tmp_path):
+    """The acceptance scenario: on a fault-wrapped 3-way stripe, device
+    1 hard-fails mid-run and reads briefly raise; training completes
+    every step, the retry / recompute-fallback / rebalance paths each
+    fire at least once, and the losses match a healthy run."""
+    def run(tag, chaos):
+        dirs = [str(tmp_path / tag / f"d{i}") for i in range(3)]
+        io = SpoolIoConfig(backend="fault:striped:" + ",".join(dirs),
+                           retry_attempts=2, retry_backoff_s=1e-3)
+        mp = str(tmp_path / f"{tag}.jsonl")
+        losses = []
+        with _staged_session(io, metrics_path=mp) as sess:
+            harness = ChaosHarness(sess.spool.backend)
+            assert harness.fault is not None
+            assert harness.striped is not None
+            for step in range(5):
+                if chaos and step == 2:
+                    sess.spool.wait_io()
+                    harness.kill_device(1)
+                    harness.raising_reads(5)
+                losses += sess.run(1).losses
+            report = harness.report()
+            stats = sess.spool.stats.snapshot()
+        with open(mp) as f:
+            rows = [json.loads(line) for line in f]
+        return losses, report, stats, rows
+
+    healthy_losses, _, _, _ = run("healthy", False)
+    losses, report, stats, rows = run("chaos", True)
+
+    assert len(losses) == 5 and all(np.isfinite(losses))
+    # every degradation rung fired
+    assert stats.load_retries > 0, "retry path never exercised"
+    assert stats.fetch_fallbacks > 0, "recompute fallback never fired"
+    assert report["read_failures"] == 5
+    assert report["rebalanced_chunks"] > 0, "rebalance never happened"
+    assert report["devices_down"] == 1
+    # loss parity: forward math is chaos-free and the recompute branch
+    # re-derives the same gradients
+    np.testing.assert_allclose(losses, healthy_losses, rtol=1e-3)
+    # the metrics stream recorded the incident, step by step
+    assert len(rows) == 5
+    assert all("resilience_health" in r for r in rows)
+    assert sum(r["resilience_fetch_fallbacks"] for r in rows) \
+        == stats.fetch_fallbacks
+    assert rows[-1]["resilience_devices_down"] == 1
+    assert rows[0]["resilience_devices_down"] == 0
+
+
+def test_unwrap_chain_walks_wrappers(tmp_path):
+    bk = backend_from_spec(
+        f"fault:tiered:1mb,striped:{tmp_path}/a,{tmp_path}/b")
+    kinds = {b.kind for b in unwrap_chain(bk)}
+    assert {"fault", "tiered", "striped"} <= kinds
+    h = ChaosHarness(bk)
+    assert h.fault is not None and h.striped is not None
+    bk.close()

@@ -98,8 +98,10 @@ def test_failed_store_then_fetch_forwards_in_memory():
 
 def test_failed_store_peek_then_fetch_counts_one_forwarding():
     """Peek-then-fetch of one failed store is ONE forwarding event (the
-    fwd_counted regression), even through the injector."""
-    bk = FaultInjectingBackend(HostMemoryBackend(), fail_writes=1)
+    fwd_counted regression), even through the injector. Three armed
+    failures defeat the default 3-attempt retry, so the store really
+    fails (a single transient failure is ridden out since resilience)."""
+    bk = FaultInjectingBackend(HostMemoryBackend(), fail_writes=3)
     spool = _spool(bk)
     rng = np.random.default_rng(1)
     tree = _tree(rng)
@@ -110,6 +112,7 @@ def test_failed_store_peek_then_fetch_counts_one_forwarding():
         _assert_tree_equal(tree, tx.fetch(0))
         tx.drop(0)
     assert spool.stats.bytes_forwarded == _tree_bytes(tree)
+    assert spool.stats.store_retries == 2    # attempts 2 and 3
     spool.close()
 
 
@@ -250,7 +253,7 @@ def test_fault_injection_through_spool_store_path_keeps_worker_alive():
         spool.wait_io()
         _assert_tree_equal(ok, tx.fetch(0))
         tx.drop(0)
-    bk.arm_write_failures(1, key_substr="s1")
+    bk.arm_write_failures(3, key_substr="s1")  # defeats 3-try retry
     bad = _tree(rng)
     with spool.step("s1") as tx:
         tx.offload(0, bad)
@@ -262,6 +265,7 @@ def test_fault_injection_through_spool_store_path_keeps_worker_alive():
         spool.wait_io()
         _assert_tree_equal(ok, tx.fetch(0))
         tx.drop(0)
-    assert bk.injected["write_failures"] == 1
+    assert bk.injected["write_failures"] == 3
+    assert spool.stats.store_retries == 2
     assert spool.stats.num_stores == 2
     spool.close()
