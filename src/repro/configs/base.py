@@ -198,6 +198,10 @@ class SpoolIoConfig:
     load_threads: int = 4
     bandwidth_limit: Optional[float] = None
     host_offload: str = "none"      # none | opt_state | activations (jit)
+    # jit engine: overlap the optimizer step with backward — per-layer
+    # eager updates with moment fetch/update/stage hidden under compute
+    # (repro.optim.overlap.OptBridge). Needs a clip-free optimizer.
+    opt_overlap: bool = False
     dedupe_replicas: bool = True    # mesh: store replicated shards once
     # --- data-plane knobs (buffer pool / direct I/O) ---
     alignment: int = 4096           # pool + O_DIRECT alignment
@@ -223,6 +227,7 @@ class SpoolIoConfig:
         assert self.host_mem_budget_bytes >= 0
         assert self.host_offload in ("none", "opt_state", "activations"), \
             self.host_offload
+        assert isinstance(self.opt_overlap, bool), self.opt_overlap
         assert isinstance(self.dedupe_replicas, bool), self.dedupe_replicas
         import mmap
         assert self.alignment > 0 and \

@@ -48,6 +48,16 @@ operands. The pairing is therefore enforced by DATA dependence, not by
 `ordered=True` effects — scan linearization drops unordered-result-free
 effectful calls from the forward pass, and tokens also keep XLA from
 reordering a fetch before its store was enqueued.
+
+Grad taps (eager optimizer overlap): with an `opt_sink`, the backward
+rule additionally streams each layer's parameter cotangents to
+`opt_sink.on_grads(step, stage, leaves)` the moment the layer's vjp has
+run — while XLA continues into the next-lower layer's backward. The tap
+is fire-and-forget (the sink must never block the callback thread); its
+liveness token is folded back into dp by multiplying leaf 0 with a
+runtime ``token*0.0 + 1.0`` float gate — bitwise-exact (×1.0) yet not
+constant-foldable, so the tap survives DCE. An integer ``token*0`` fold
+would be simplified away, and ``+0.0`` would flip ``-0.0`` bits.
 """
 from __future__ import annotations
 
@@ -360,8 +370,90 @@ class HookBridge:
             tx.close()
 
 
+def _tap_grads(dp, step, stage, sink, mesh=None):
+    """Stream one layer's parameter cotangents to ``sink.on_grads``
+    from inside the backward trace without changing dp's value.
+
+    Single device: one raw_io_callback with the dp leaves as operands
+    (the sink copies what it keeps). On a mesh the tap runs under a
+    shard_map with replicated in_specs — GSPMD materializes the
+    logically-correct (post-reduction) gradients before the body — and
+    only the device with linear index 0 hands them to the sink; the
+    token is psum'd so every device's schedule orders the tap
+    (offload_body precedent). The returned dp folds the token in via
+    the ×1.0 gate described in the module docstring."""
+    leaves, treedef = jax.tree.flatten(dp)
+    if not leaves:
+        return dp
+    if mesh is None or mesh_size(mesh) <= 1:
+        def grad_tap_cb(step_, stage_, *arrays):
+            sink.on_grads(int(step_), int(stage_),
+                          [np.array(a, copy=True) for a in arrays])
+            return np.int32(0)
+
+        tok = io_callback(grad_tap_cb,
+                          jax.ShapeDtypeStruct((), jnp.int32),
+                          step, stage, *leaves)
+        gate = tok.astype(jnp.float32) * 0.0 + 1.0
+    else:
+        axis_names = tuple(mesh.axis_names)
+
+        def grad_tap_cb(step_, stage_, dev_, *arrays):
+            if int(np.asarray(dev_).reshape(())) == 0:
+                sink.on_grads(int(step_), int(stage_),
+                              [np.array(a, copy=True) for a in arrays])
+            return np.zeros((1,), np.int32)
+
+        def tap_body(step_, stage_, *leaves_):
+            dev_ = linear_axis_index(mesh, axis_names)
+            tok = io_callback(grad_tap_cb,
+                              jax.ShapeDtypeStruct((1,), jnp.int32),
+                              step_, stage_, dev_, *leaves_)
+            return jax.lax.psum(tok, axis_names)
+
+        token_spec = P(canonical_axis_entry(axis_names))
+        tok = shard_map(tap_body, mesh=mesh,
+                        in_specs=(P(), P(), *([P()] * len(leaves))),
+                        out_specs=token_spec,
+                        check_vma=False)(step, stage, *leaves)
+        gate = jnp.sum(tok.astype(jnp.float32)) * 0.0 + 1.0
+    leaves = [leaves[0] * gate.astype(leaves[0].dtype)] + leaves[1:]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def tapped_scan_body(fn: Callable, opt_sink, *, mesh=None) -> Callable:
+    """Tap-only wrapper for segments whose residuals stay in device
+    memory (``host_offload="opt_state"`` with opt overlap): the forward
+    saves the ordinary vjp residuals as XLA residuals — no spool I/O —
+    and the backward streams each layer's parameter grads to
+    `opt_sink` the moment its vjp has run. Same
+    ``wrapped(p, x, step, stage)`` signature as `spooled_scan_body`."""
+    cell: Dict[str, Any] = {}
+
+    @jax.custom_vjp
+    def wrapped(p, x, step, stage):
+        return fn(p, x)
+
+    def fwd(p, x, step, stage):
+        out, vjp = jax.vjp(fn, p, x)
+        leaves, treedef = jax.tree.flatten(vjp)
+        cell["treedef"] = treedef
+        return out, (tuple(leaves), step, stage)
+
+    def bwd(res, g):
+        leaves, step, stage = res
+        vjp = jax.tree.unflatten(cell["treedef"], list(leaves))
+        dp, dx = vjp(g)
+        dp = _tap_grads(dp, step, stage, opt_sink, mesh)
+        return dp, dx, jnp.zeros_like(step), jnp.zeros_like(stage)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
 def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
-                      mesh=None, dp_axes=(), tp_axis=None) -> Callable:
+                      mesh=None, dp_axes=(), tp_axis=None,
+                      opt_sink=None) -> Callable:
     """Wrap ``fn(p_layer, x) -> out`` (a segment's per-layer body) so its
     residuals stream through the bridge's spool.
 
@@ -374,7 +466,8 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
     With a multi-device `mesh`, the callbacks run under a shard_map so
     each device hands the bridge only its local residual shard (see the
     module docstring); `dp_axes`/`tp_axis` seed the per-leaf sharding
-    choice exactly like `RunSettings`.
+    choice exactly like `RunSettings`. With an `opt_sink`, the backward
+    additionally taps the layer's parameter grads (see `_tap_grads`).
     """
     # populated at trace time by fwd, read by bwd (same trace); the
     # pattern and the param-leaf identity test match core.staged._Stage
@@ -548,6 +641,9 @@ def spooled_scan_body(fn: Callable, bridge: HookBridge, *,
         else:
             vjp = jax.tree.unflatten(cell["treedef"], leaves)
             dp, dx = vjp(g)
+        if opt_sink is not None:
+            dp = _tap_grads(dp, step, stage, opt_sink,
+                            mesh if sharded else None)
         return dp, dx, jnp.zeros_like(step), jnp.zeros_like(stage)
 
     wrapped.defvjp(fwd, bwd)

@@ -154,9 +154,13 @@ class AdaptivePolicy(OffloadPolicy):
     strategy = "offload"
 
     def __init__(self, *, bwd_factor: float = BWD_FACTOR,
-                 always_keep_last: bool = True):
+                 always_keep_last: bool = True,
+                 opt_bytes_per_step: int = 0):
         self.bwd_factor = bwd_factor
         self.always_keep_last = always_keep_last
+        # opt-overlap moment traffic sharing the write path (see
+        # price_opt_io); 0 = no optimizer I/O competing for bandwidth
+        self.opt_bytes_per_step = int(opt_bytes_per_step)
         self.plan = None
         self.profiles: Optional[List[ModuleProfile]] = None
         self.bandwidths: Optional[BandwidthLike] = None
@@ -173,6 +177,40 @@ class AdaptivePolicy(OffloadPolicy):
         into the manager's per-class reuse distances, so tier placement
         and the offload plan derive from the same profile."""
         self.cache_manager = manager
+
+    def price_opt_io(self, bytes_per_step: int) -> None:
+        """Account for the opt-overlap bridge's moment traffic: the
+        bridge stages ~`bytes_per_step` of optimizer state through the
+        same write path every step, so the activation deadline test must
+        plan against the leftover bandwidth, not the raw tier rate.
+        Re-plans immediately when a profile is already in hand."""
+        with self._replan_lock:
+            self.opt_bytes_per_step = int(bytes_per_step)
+            if self.profiles is None or self.bandwidths is None:
+                return      # priced at on_profile time instead
+            self.plan = plan_offload(
+                self.profiles, self._priced(self.bandwidths),
+                bwd_factor=self.bwd_factor,
+                always_keep_last=self.always_keep_last)
+            self.replans += 1
+
+    def _priced(self, bandwidths: BandwidthLike) -> BandwidthLike:
+        """`bandwidths` minus the opt-state write rate. The moment
+        writer moves opt_bytes_per_step over one step, so it claims
+        bytes/t_step of write bandwidth; floor at 1 B/s so a saturated
+        tier degrades the plan instead of crashing the divide."""
+        if self.opt_bytes_per_step <= 0 or not self.profiles:
+            return bandwidths
+        t_step = sum(p.fwd_time for p in self.profiles) \
+            * (1.0 + self.bwd_factor)
+        if t_step <= 0:
+            return bandwidths
+        rate = self.opt_bytes_per_step / t_step
+        if isinstance(bandwidths, (int, float)):
+            return max(float(bandwidths) - rate, 1.0)
+        return [TierBandwidth(t.name, max(t.write_bw - rate, 1.0),
+                              t.capacity_bytes)
+                for t in bandwidths]
 
     def attach_health(self, health) -> None:
         """Subscribe to a `repro.resilience.BackendHealth` monitor: on
@@ -203,7 +241,8 @@ class AdaptivePolicy(OffloadPolicy):
             else:            # recovered
                 scale = 1.0
             self.plan = plan_offload(
-                self.profiles, _scale_bandwidths(self.bandwidths, scale),
+                self.profiles,
+                self._priced(_scale_bandwidths(self.bandwidths, scale)),
                 bwd_factor=self.bwd_factor,
                 always_keep_last=self.always_keep_last)
             self.replans += 1
@@ -228,7 +267,7 @@ class AdaptivePolicy(OffloadPolicy):
     def on_profile(self, profiles, bandwidths) -> OffloadPlan:
         self.profiles = list(profiles)
         self.bandwidths = bandwidths
-        self.plan = plan_offload(self.profiles, bandwidths,
+        self.plan = plan_offload(self.profiles, self._priced(bandwidths),
                                  bwd_factor=self.bwd_factor,
                                  always_keep_last=self.always_keep_last)
         if self.cache_manager is not None:
@@ -275,7 +314,7 @@ class AdaptivePolicy(OffloadPolicy):
                                     int(round(p.bytes * shard_fraction)),
                                     p.fwd_time)
                       for p in self.profiles]
-            plan = plan_offload(scaled, self.bandwidths,
+            plan = plan_offload(scaled, self._priced(self.bandwidths),
                                 bwd_factor=self.bwd_factor,
                                 always_keep_last=self.always_keep_last)
         mask = tuple(bool(off)

@@ -139,6 +139,10 @@ class SpoolStats:
     store_retries: int = 0
     load_retries: int = 0
     fetch_fallbacks: int = 0
+    # write-back policy: opt-state bytes whose SSD rewrite was skipped
+    # because the moments were byte-identical to the staged copy
+    # (zero-grad layers, frozen params)
+    opt_skipped_bytes: int = 0
 
     @property
     def write_bandwidth(self) -> float:

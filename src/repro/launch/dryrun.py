@@ -48,7 +48,9 @@ def model_flops(kind: str, n_params: int, n_active: int,
 
 
 def _predict_overlap(host_bytes: float, write_bw: float,
-                     t_compute: float) -> Dict[str, Any]:
+                     t_compute: float, *,
+                     opt_bytes: float = 0.0,
+                     opt_update_flops: float = 0.0) -> Dict[str, Any]:
     """Roofline prediction of how much activation I/O the step can hide.
 
     SSDTrain's schedule writes each layer's residuals during the forward
@@ -58,6 +60,14 @@ def _predict_overlap(host_bytes: float, write_bw: float,
     transfer does not fit its window is exposed stall; the keys match
     `repro.obs.overlap.analyze()` so `predicted_vs_measured()` can pair
     this block with a traced run.
+
+    With `opt_bytes > 0` (per-device optimizer-moment bytes, the
+    opt-overlap bridge's traffic) the prediction also times the eager
+    per-layer optimizer schedule: as each layer's gradients materialize
+    in backward, its moments are fetched, the update computed on the
+    side stream, and new moments staged back — all inside the backward
+    window, sharing bandwidth with activation fetches. Keyword-only so
+    existing positional call sites keep their meaning.
     """
     t_store = host_bytes / write_bw          # offload: fwd-side writes
     t_fetch = host_bytes / write_bw          # fetch: bwd-side reads
@@ -65,15 +75,33 @@ def _predict_overlap(host_bytes: float, write_bw: float,
     t_fwd = t_compute / 3.0                  # 2ND of the 6ND step
     t_bwd = t_compute * 2.0 / 3.0            # 4ND of the 6ND step
     exposed = (max(0.0, t_store - t_fwd) + max(0.0, t_fetch - t_bwd))
+    # eager opt schedule: fetch + stage ride the backward window, on the
+    # same spool bandwidth the activation fetches use; the side-stream
+    # update itself is host compute, bandwidth-free
+    t_opt_fetch = opt_bytes / write_bw
+    t_opt_stage = opt_bytes / write_bw
+    t_opt_update = (opt_update_flops / PEAK_FLOPS_BF16
+                    if opt_update_flops else 0.0)
+    t_opt_io = t_opt_fetch + t_opt_stage
+    opt_window = max(0.0, t_bwd - max(0.0, t_fetch))  # leftover bwd room
+    opt_exposed = max(0.0, t_opt_io + t_opt_update - opt_window) \
+        if t_opt_io > 0 else 0.0
     return {
         "t_store_s": t_store,
         "t_fetch_s": t_fetch,
         "t_io_s": t_io,
         "t_fwd_s": t_fwd,
         "t_bwd_s": t_bwd,
-        "per_stage_io_s": {"fwd_store": t_store, "bwd_fetch": t_fetch},
+        "per_stage_io_s": {"fwd_store": t_store, "bwd_fetch": t_fetch,
+                           "bwd_opt_fetch": t_opt_fetch,
+                           "bwd_opt_stage": t_opt_stage},
         "exposed_wait_s": exposed,
         "io_hidden_frac": (1.0 - exposed / t_io) if t_io > 0 else 1.0,
+        "t_opt_io_s": t_opt_io,
+        "t_opt_update_s": t_opt_update,
+        "opt_exposed_wait_s": min(opt_exposed, t_opt_io),
+        "opt_hidden_frac": ((1.0 - min(opt_exposed, t_opt_io) / t_opt_io)
+                            if t_opt_io > 0 else 1.0),
     }
 
 
@@ -228,7 +256,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             # can be checked against this prediction with
             # repro.obs.overlap.predicted_vs_measured().
             predicted_overlap=_predict_overlap(
-                ana.host_bytes, NOMINAL_WRITE_BW[io_backend], t_compute),
+                ana.host_bytes, NOMINAL_WRITE_BW[io_backend], t_compute,
+                # fp32 moments per device, fetched+staged every step by
+                # the eager per-layer schedule (adamw: 8 B/param)
+                opt_bytes=(int(bundle.n_params / chips)
+                           * {"adamw": 8, "sgd": 0}.get(
+                               rec.get("optimizer") or "", 0))),
             # Predicted tier residency per tensor class under the
             # managed cache's placement model — pairs with the
             # cache_residency block of a --cache-managed run's metrics

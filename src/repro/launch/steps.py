@@ -123,6 +123,53 @@ def make_host_train_step(api: ModelApi, optimizer: Optimizer,
     return sharded_step
 
 
+def make_overlap_train_step(api: ModelApi, optimizer: Optimizer,
+                            settings: RunSettings, opt_bridge, *,
+                            mesh=None,
+                            axes: Optional[MeshAxes] = None) -> Callable:
+    """Eager-overlap variant of `make_host_train_step`.
+
+    The jitted program computes only (metrics, grads): the per-layer
+    grad taps (`settings.opt_sink`, see repro.core.hooks) stream each
+    scanned layer's gradients to the OptBridge as backward produces
+    them, and the bridge's side stream fetches/updates/stages that
+    layer's opt-state moments while XLA is still in the next layer's
+    backward. The Python wrapper keeps the TrainLoop contract
+    ``(params, opt_state, batch) -> (params, opt_state, metrics)``:
+    it joins the side stream only after blocking on the grads (by then
+    every tap has fired — the taps' tokens are data dependencies of the
+    grads) and applies the non-scanned rest of the tree on the main
+    thread with the same kernels. `opt_state` is the bridge's light
+    ``(step, None, None)`` husk after the first step; the incoming full
+    state seeds the bridge lazily (init and resume both land here)."""
+    axes = axes or MeshAxes()
+
+    @jax.jit
+    def grad_fn(params, step, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        batch["_spool_step"] = step
+        (_, metrics), grads = jax.value_and_grad(
+            api.loss, has_aux=True)(params, batch, settings)
+        return metrics, grads
+
+    def step_fn(params, opt_state, batch):
+        opt_bridge.ensure_seeded(opt_state, params)
+        step_i = int(opt_state.step)
+        opt_bridge.begin_step(params, step_i)
+        if mesh is not None:
+            arrs = {k: np.asarray(v) for k, v in batch.items()}
+            specs = batch_specs(arrs, mesh, axes)
+            batch = jax.device_put(
+                arrs, {k: NamedSharding(mesh, specs[k]) for k in arrs})
+        metrics, grads = grad_fn(params,
+                                 jnp.asarray(step_i, jnp.int32), batch)
+        jax.block_until_ready(grads)
+        new_params, new_opt = opt_bridge.finish_step(params, grads)
+        return new_params, new_opt, metrics
+
+    return step_fn
+
+
 @dataclass
 class StepBundle:
     fn: Callable                  # jit-able step function

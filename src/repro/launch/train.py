@@ -93,6 +93,22 @@ def main() -> None:
     ap.add_argument("--spool-pool-mb", type=int, default=256,
                     help="idle cap of the shared aligned buffer pool "
                          "in MiB")
+    ap.add_argument("--clip-norm", type=float, default=None,
+                    metavar="NORM",
+                    help="global grad-norm clip (adamw defaults to "
+                         "1.0); 0 disables clipping — use it to build "
+                         "a serial baseline comparable bit-for-bit "
+                         "with --opt-overlap")
+    ap.add_argument("--opt-overlap", action="store_true",
+                    help="jit engine: eager per-layer optimizer updates "
+                         "overlapped with backward — moment leases "
+                         "stream through the spool backend while the "
+                         "next layer's gradients compute "
+                         "(repro.optim.overlap). Bitwise-identical to "
+                         "the serial step. Implies a clip-free "
+                         "optimizer (global-norm clipping needs every "
+                         "gradient before any update); supersedes "
+                         "--host-offload opt_state")
     ap.add_argument("--host-offload", nargs="?", const="opt_state",
                     default="none",
                     choices=["none", "opt_state", "activations"],
@@ -162,6 +178,28 @@ def main() -> None:
         if ndev > 1:
             mesh = make_test_mesh(shape, names)
 
+    optimizer = args.optimizer
+    if args.opt_overlap:
+        if args.engine != "jit":
+            ap.error("--opt-overlap is a jit-engine flag")
+        if args.clip_norm:
+            ap.error("--opt-overlap needs a clip-free optimizer "
+                     "(global-norm clipping requires every gradient "
+                     "before any update); pass --clip-norm 0 or drop "
+                     "the flag")
+    if args.opt_overlap or args.clip_norm is not None:
+        from repro.optim.optimizers import adamw, sgd
+        clip = (None if args.opt_overlap or not args.clip_norm
+                else args.clip_norm)
+        if args.optimizer == "adamw":
+            optimizer = adamw(args.lr, clip_norm=clip)
+            if args.opt_overlap:
+                print("opt-overlap: using clip-free adamw (global-norm "
+                      "clipping is incompatible with eager per-layer "
+                      "updates)")
+        else:
+            optimizer = sgd(args.lr, clip_norm=clip)
+
     stripe_dirs = tuple(d for d in (args.stripe_dirs or "").split(",")
                         if d)
     cache_ov = cache_overrides(args)
@@ -186,7 +224,8 @@ def main() -> None:
     with TrainSession(
             args.arch, engine=args.engine,
             policy=args.strategy if args.engine == "staged" else None,
-            io=io, optimizer=args.optimizer, lr=args.lr,
+            io=io, optimizer=optimizer, lr=args.lr,
+            opt_overlap=args.opt_overlap or None,
             batch_size=args.batch, seq_len=args.seq, seed=args.seed,
             microbatches=args.microbatches, mesh=mesh,
             ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
@@ -247,6 +286,14 @@ def main() -> None:
                       f"{rs.fetch_fallbacks} recompute fallbacks; "
                       f"backend health={session.spool.health.status}",
                       flush=True)
+        if session._opt_bridge is not None and session._opt_bridge.seeded:
+            st = session._opt_bridge.stats()
+            print(f"opt-overlap: {st['opt_updates']} per-layer updates, "
+                  f"fetched {st['opt_fetched_bytes']/1e6:.1f} MB, staged "
+                  f"{st['opt_staged_bytes']/1e6:.1f} MB, skipped "
+                  f"{st['opt_stage_skips']} unchanged stage-backs "
+                  f"({st['opt_skipped_bytes']/1e6:.1f} MB not rewritten)",
+                  flush=True)
         if args.trace:
             last_obs = next((r.obs for r in reversed(result.reports)
                              if r.obs), None)
@@ -260,6 +307,11 @@ def main() -> None:
                       f"{last_obs['stall_queue_s']*1e3:.1f} ms; "
                       f"prefetch hit rate "
                       f"{last_obs['prefetch_hit_rate']:.0%}", flush=True)
+            if last_obs and last_obs.get("opt_io_busy_s", 0) > 0:
+                print(f"opt overlap (last step): "
+                      f"{last_obs['opt_hidden_frac']:.0%} of "
+                      f"{last_obs['opt_io_busy_s']*1e3:.1f} ms opt-state "
+                      f"I/O hidden under backward", flush=True)
         if args.engine == "jit":
             flagged = (len(session.watchdog.flagged)
                        if session.watchdog else 0)

@@ -89,10 +89,17 @@ def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
     hooked = (settings.activation_policy == "spool"
               and settings.hook_bridge is not None
               and hook_step is not None and not emit_cache)
-    if hooked:
-        from repro.core.hooks import run_splits, spooled_scan_body
+    # Grad-tap mode rides the same per-layer custom_vjp machinery but
+    # needs no spool offload: segments (or runs) that are not hooked get
+    # a tap-only wrapper so the opt sink still sees every layer's grads.
+    tapping = (settings.opt_sink is not None
+               and hook_step is not None and not emit_cache)
+    if hooked or tapping:
+        from repro.core.hooks import (run_splits, spooled_scan_body,
+                                      tapped_scan_body)
         step_f = jnp.asarray(hook_step, jnp.float32)
-        mask = settings.spool_stages if hook_base == 0 else None
+        mask = (settings.spool_stages
+                if hooked and hook_base == 0 else None)
     layer0 = 0
 
     for seg, p_stack in zip(segs, seg_params):
@@ -108,7 +115,7 @@ def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
                         bdef, c, cfg, cache_len)
             return x, (cache_entries if emit_cache else None, aux)
 
-        if hooked:
+        if hooked or tapping:
             # enc_states must be an EXPLICIT custom_vjp input (a
             # closed-over differentiable value raises at trace time and
             # its cotangent would be lost), so cross-attention segments
@@ -126,13 +133,21 @@ def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
                 out = (x_, enc_) if enc_states is not None else x_
                 return out, aux
 
-            wrapped = spooled_scan_body(seg_fn, settings.hook_bridge,
-                                        mesh=settings.mesh,
-                                        dp_axes=settings.dp_axes,
-                                        tp_axis=settings.tp_axis)
-            seg_mask = [bool(mask[layer0 + i])
+            if hooked:
+                wrapped = spooled_scan_body(seg_fn, settings.hook_bridge,
+                                            mesh=settings.mesh,
+                                            dp_axes=settings.dp_axes,
+                                            tp_axis=settings.tp_axis,
+                                            opt_sink=settings.opt_sink)
+            if tapping:
+                # remat_policy still applies to tap-only bodies so
+                # "remat" keeps its memory profile under the tap
+                tap_wrapped = tapped_scan_body(wrap(seg_fn),
+                                               settings.opt_sink,
+                                               mesh=settings.mesh)
+            seg_mask = [hooked and (bool(mask[layer0 + i])
                         if mask is not None and layer0 + i < len(mask)
-                        else True
+                        else True)
                         for i in range(seg.n_repeat)]
             carry = (x, enc_states) if enc_states is not None else x
             for start, end, offl in run_splits(seg_mask):
@@ -144,6 +159,16 @@ def _run_segments(x, seg_params, segs, cfg, settings, *, enc_states=None,
                     def scan_body(c, inp, wrapped=wrapped):
                         p_layer, idx = inp
                         return wrapped(p_layer, c, step_f, idx)
+
+                    carry, aux_stack = jax.lax.scan(scan_body, carry,
+                                                    (p_run, idxs))
+                elif tapping:
+                    idxs = (jnp.arange(start, end, dtype=jnp.float32)
+                            + (hook_base + layer0))
+
+                    def scan_body(c, inp, tap_wrapped=tap_wrapped):
+                        p_layer, idx = inp
+                        return tap_wrapped(p_layer, c, step_f, idx)
 
                     carry, aux_stack = jax.lax.scan(scan_body, carry,
                                                     (p_run, idxs))

@@ -110,6 +110,12 @@ class RunSettings:
     # AdaptivePolicy.plan_for_jit() emits these).
     hook_bridge: Any = None
     spool_stages: Optional[Tuple[bool, ...]] = None
+    # Eager optimizer overlap: a sink with `on_grads(step, stage,
+    # leaves)` — when set (and a hook step is provided), every scanned
+    # segment's backward taps its per-layer parameter grads to it the
+    # moment they materialize (repro.core.hooks._tap_grads). Segments
+    # that are not spool-offloaded get a tap-only wrapper.
+    opt_sink: Any = None
     mesh: Any = None                  # jax Mesh (sharding hints + EP)
     ep_axis: Optional[str] = None     # expert-parallel axis (MoE shard_map)
     tp_axis: Optional[str] = None     # tensor-parallel axis (hints)

@@ -97,7 +97,7 @@ class _Span:
     def __enter__(self) -> "_Span":
         self._ring = self._tracer._ring()
         self._ring.open_depth += 1
-        self._t0 = time.perf_counter_ns()
+        self._t0 = self._tracer._clock()
         return self
 
     def set(self, **args: Any) -> None:
@@ -105,7 +105,7 @@ class _Span:
         self._args.update(args)
 
     def __exit__(self, exc_type, exc, tb) -> None:
-        t1 = time.perf_counter_ns()
+        t1 = self._tracer._clock()
         ring = self._ring
         ring.open_depth -= 1
         ring.push((self._name, self._cat, self._t0, t1 - self._t0,
@@ -136,16 +136,19 @@ class Tracer:
     `count()` helpers rather than instantiated directly (unit tests
     instantiate directly to keep state local)."""
 
-    def __init__(self, ring_size: int = DEFAULT_RING_SIZE):
+    def __init__(self, ring_size: int = DEFAULT_RING_SIZE,
+                 clock: Optional[Any] = None):
         if ring_size < 1:
             raise ValueError(f"ring_size must be >= 1, got {ring_size}")
         self.ring_size = ring_size
-        self.t0_ns = time.perf_counter_ns()     # export epoch
+        # one clock everywhere; injectable so tests can drive virtual
+        # time instead of asserting against wall-clock under load
+        self._clock = clock or time.perf_counter_ns
+        self.t0_ns = self._clock()              # export epoch
         self._local = threading.local()
         self._rings: List[_Ring] = []
         self._lock = threading.Lock()
         self._counters: Dict[str, float] = {}
-        self._clock_id = time.perf_counter_ns   # one clock everywhere
 
     # -------------------------------------------------------- recording
 
@@ -166,7 +169,7 @@ class Tracer:
 
     def instant(self, name: str, cat: str = "",
                 args: Optional[dict] = None) -> None:
-        self._ring().push((name, cat, time.perf_counter_ns(), -1,
+        self._ring().push((name, cat, self._clock(), -1,
                            args or {}))
 
     def add(self, name: str, n: float = 1) -> None:

@@ -26,6 +26,15 @@ class Optimizer:
     init: Callable[[Any], OptState]
     update: Callable[[Any, OptState, Any], Tuple[Any, OptState]]
     name: str = "opt"
+    #: global-norm clip threshold the fused `update` applies (None = off).
+    #: Exposed so schedulers can tell whether the update needs all grads
+    #: at once — per-layer eager updates are only valid when this is None.
+    clip_norm: Optional[float] = None
+    #: per-leaf kernel `(p, m, v, g, step) -> (new_p, new_m, new_v)` with
+    #: math identical to the fused `update` (step is the post-increment
+    #: step index, i.e. `state.step + 1`). `m`/`v` are None for
+    #: optimizers without that moment. Drives the eager overlapped path.
+    leaf_update: Optional[Callable] = None
 
 
 def clip_by_global_norm(grads, max_norm: float):
@@ -60,7 +69,19 @@ def sgd(lr: float = 1e-3, momentum: float = 0.0,
             params, upd)
         return new_params, OptState(state.step + 1, mu, None)
 
-    return Optimizer(init, update, "sgd")
+    def leaf_update(p, m, v, g, step):
+        del v, step
+        if momentum:
+            mu = momentum * m + g.astype(jnp.float32)
+            u = mu
+        else:
+            mu, u = None, g
+        new_p = (p.astype(jnp.float32)
+                 - lr * u.astype(jnp.float32)).astype(p.dtype)
+        return new_p, mu, None
+
+    return Optimizer(init, update, "sgd", clip_norm=clip_norm,
+                     leaf_update=leaf_update)
 
 
 def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
@@ -97,7 +118,23 @@ def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
         new_params = jax.tree.map(upd, params, mu, nu)
         return new_params, OptState(step, mu, nu)
 
-    return Optimizer(init, update, "adamw")
+    def leaf_update(p, m, v, g, step):
+        sched = jnp.minimum(1.0, step / max(warmup_steps, 1)) \
+            if warmup_steps else 1.0
+        lr_t = lr * sched
+        mu = b1 * m + (1 - b1) * g.astype(jnp.float32)
+        nu = b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32))
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        mhat = mu / bc1
+        vhat = nu / bc2
+        u = mhat / (jnp.sqrt(vhat) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+        return new_p, mu, nu
+
+    return Optimizer(init, update, "adamw", clip_norm=clip_norm,
+                     leaf_update=leaf_update)
 
 
 def zero1_shardings(params_specs, dp_axes: Tuple[str, ...]):

@@ -1,0 +1,475 @@
+"""Eager per-layer optimizer updates overlapped with backward
+(`repro.optim.overlap`).
+
+The serial jit step runs fwd -> bwd -> one fused optimizer tail, so
+with ``host_offload="opt_state"`` every step pays the whole opt-state
+round trip exposed between steps. GreedySnake-style scheduling hides
+it: the moment layer *i*'s parameter gradients materialize inside
+backward (streamed out by the grad taps in `repro.core.hooks`), layer
+*i*'s moments are fetched from the spool, the update runs, and the new
+moments are staged back — all while XLA is still computing layer
+*i-1*'s backward. `OptBridge` is that side stream:
+
+  * `on_grads(step, stage, leaves)` is the tap endpoint. It runs on an
+    XLA host-callback thread, so it does nothing but enqueue — the
+    leaves were already copied by the tap and the callback must never
+    touch the jax runtime (see `repro.core.hostcb`).
+  * a plain Python worker thread drains the queue: per stage it peeks
+    the stage's moment lease (`engine.opt_fetch` would be the exposed
+    serial span — here the fetch hides under backward), prefetches the
+    next stages in backward-arrival order `prefetch_depth` ahead
+    (`reuse_horizon`, same hint path as activation fetches; the default
+    depth of 2 keeps the read for a tap that fires right after the
+    current one already in flight), applies the optimizer's
+    per-leaf `leaf_update` kernel (jitted XLA — a numpy re-derivation
+    is NOT bitwise-identical to the fused update, XLA contracts FMAs),
+    and stages the new moments back under the next step's lease.
+  * write-back policy: moments whose bytes did not change (zero-grad
+    layers, frozen params) keep their existing lease instead of
+    rewriting the SSD; the saved traffic is counted in
+    `spool.stats.opt_skipped_bytes`.
+  * `finish_step` joins the worker after the main thread has blocked
+    on the grads (`engine.opt_join` — the only exposure the overlap
+    leaves), updates the non-scanned rest of the tree with the same
+    kernels, and reassembles the stacked parameters.
+
+Bitwise contract: the per-leaf kernels share their math with the fused
+`Optimizer.update`, and the update order per leaf is independent, so
+eager (worker) and sync (``eager=False``, drain-in-finish_step) modes
+produce identical bytes by construction. Global-norm clipping needs
+every gradient before any update and is therefore incompatible with
+eager per-layer updates — callers must hand the bridge a clip-free
+optimizer (`TrainSession` raises otherwise).
+
+Moment leases are per (step, stage): ``spool.step(f"opt{step}L{stage}")``
+with the payload at stage key 0, so the spool keys
+(``opt{step}L{stage}_s0``) keep the ``opt`` prefix the cache manager's
+opt_state class and the obs overlap analyzer classify on.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.cache.horizon import reuse_horizon
+from repro.core.hooks import ENC_STAGE_BASE
+from repro.optim.optimizers import Optimizer, OptState
+
+#: how long finish_step waits for the worker to drain before declaring
+#: the step lost (a tap that never fired or a wedged backend)
+DEFAULT_JOIN_TIMEOUT_S = 120.0
+
+_SCAN_KEYS = (("segments", 0), ("enc_segments", ENC_STAGE_BASE))
+
+
+def _layout_from(params) -> Dict[int, tuple]:
+    """stage -> (tree_key, segment index, in-segment layer index), for
+    every scanned layer — stage numbering mirrors models.api
+    (decoder 0-based, encoder offset by ENC_STAGE_BASE)."""
+    layout: Dict[int, tuple] = {}
+    for tree_key, base in _SCAN_KEYS:
+        stacks = params.get(tree_key) if isinstance(params, dict) else None
+        if not stacks:
+            continue
+        layer0 = 0
+        for si, stack in enumerate(stacks):
+            n = int(jax.tree.leaves(stack)[0].shape[0])
+            for li in range(n):
+                layout[base + layer0 + li] = (tree_key, si, li)
+            layer0 += n
+    return layout
+
+
+def _arrival_order(layout) -> List[int]:
+    """Expected backward arrival order of the grad taps: decoder stages
+    descending (backward walks the decoder top-down first), then the
+    encoder stages descending."""
+    dec = sorted((s for s in layout if s < ENC_STAGE_BASE), reverse=True)
+    enc = sorted((s for s in layout if s >= ENC_STAGE_BASE), reverse=True)
+    return dec + enc
+
+
+def _rest(tree) -> dict:
+    """The non-scanned subtree (embed/unembed/norms/...)."""
+    return {k: v for k, v in tree.items()
+            if k not in ("segments", "enc_segments")}
+
+
+class OptBridge:
+    """Side-stream endpoint for eager per-layer optimizer updates.
+
+    Lifecycle per step (driven by `launch.steps.make_overlap_train_step`):
+    ``seed`` (once, lazily) -> ``begin_step`` -> taps arrive via
+    ``on_grads`` while backward runs -> ``finish_step``. ``materialize``
+    reassembles the full OptState for checkpoints and run end.
+    """
+
+    def __init__(self, optimizer: Optimizer, spool, *, eager: bool = True,
+                 prefetch_depth: int = 2,
+                 join_timeout: float = DEFAULT_JOIN_TIMEOUT_S):
+        if optimizer.leaf_update is None:
+            raise ValueError(
+                f"optimizer {optimizer.name!r} has no per-leaf update "
+                f"kernel — eager overlap needs Optimizer.leaf_update")
+        if optimizer.clip_norm:
+            raise ValueError(
+                "eager per-layer updates are incompatible with global-norm "
+                "clipping (the clip needs every gradient before any "
+                "update) — build the optimizer with clip_norm=None")
+        self.optimizer = optimizer
+        self.spool = spool
+        self.eager = eager
+        self.prefetch_depth = prefetch_depth
+        self.join_timeout = join_timeout
+        self._leaf_fn = jax.jit(optimizer.leaf_update)
+        self.seeded = False
+        self._step: int = 0
+        self._has_m = False
+        self._has_n = False
+        self._rest_m: Any = None
+        self._rest_n: Any = None
+        self._mom_tx: Dict[int, Any] = {}      # stage -> live lease
+        self._layout: Dict[int, tuple] = {}
+        self._order: List[int] = []
+        self._pos: Dict[int, int] = {}
+        self._seg_meta: Dict[tuple, tuple] = {}    # (key, si) -> (treedef, n)
+        self._seg_leaves: Dict[tuple, tuple] = {}  # (key, si) -> (leaves, treedef, n)
+        self._results: Dict[int, List[Any]] = {}   # stage -> new param leaves
+        self._pending: set = set()
+        self._error: Optional[BaseException] = None
+        self._cv = threading.Condition()
+        self._queue: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        self._moment_bytes = 0
+        self.counters = {"opt_updates": 0, "opt_stage_skips": 0,
+                         "opt_fetched_bytes": 0, "opt_staged_bytes": 0,
+                         "opt_skipped_bytes": 0}
+
+    # ------------------------------------------------------------ seeding
+
+    def seed(self, opt_state: OptState, params) -> None:
+        """Adopt a full OptState: scanned-layer moments are split per
+        stage and staged to the spool; the rest of the tree stays in
+        memory. Idempotent via `seeded`."""
+        if self.seeded:
+            return
+        self._step = int(opt_state.step)
+        self._layout = _layout_from(params)
+        self._order = _arrival_order(self._layout)
+        self._pos = {s: i for i, s in enumerate(self._order)}
+        for tree_key, _ in _SCAN_KEYS:
+            stacks = params.get(tree_key)
+            if not stacks:
+                continue
+            for si, stack in enumerate(stacks):
+                leaves, treedef = jax.tree.flatten(stack)
+                self._seg_meta[(tree_key, si)] = (
+                    treedef, int(leaves[0].shape[0]))
+        self._has_m = opt_state.mu is not None
+        self._has_n = opt_state.nu is not None
+        if self._has_m:
+            self._rest_m = _rest(opt_state.mu)
+        if self._has_n:
+            self._rest_n = _rest(opt_state.nu)
+        if self._has_m:
+            for stage, (key, si, li) in self._layout.items():
+                payload = self._slice_moments(opt_state, key, si, li)
+                tx = self.spool.step(f"opt{self._step}L{stage}")
+                tx.offload(0, payload)
+                self._mom_tx[stage] = tx
+                self._moment_bytes += int(
+                    sum(a.nbytes for a in payload))
+        self.seeded = True
+        if self.eager and self._worker is None:
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="opt-overlap", daemon=True)
+            self._worker.start()
+
+    def ensure_seeded(self, opt_state: OptState, params) -> None:
+        self.seed(opt_state, params)
+
+    def _slice_moments(self, opt_state, key, si, li) -> List[np.ndarray]:
+        out = [np.asarray(leaf[li], np.float32)
+               for leaf in jax.tree.leaves(opt_state.mu[key][si])]
+        if self._has_n:
+            out += [np.asarray(leaf[li], np.float32)
+                    for leaf in jax.tree.leaves(opt_state.nu[key][si])]
+        return out
+
+    # ------------------------------------------------------ per-step API
+
+    def begin_step(self, params, step: int) -> None:
+        """Arm the bridge for one step: record the stacked param leaves
+        the worker will slice, reset the pending-stage set, and warm the
+        first expected fetch."""
+        if step != self._step:
+            raise RuntimeError(
+                f"opt bridge is at step {self._step}, got {step}")
+        if self._error is not None:
+            raise RuntimeError("opt bridge failed on a previous step") \
+                from self._error
+        self._seg_leaves = {}
+        for tree_key, _ in _SCAN_KEYS:
+            stacks = params.get(tree_key)
+            if not stacks:
+                continue
+            for si, stack in enumerate(stacks):
+                leaves, treedef = jax.tree.flatten(stack)
+                self._seg_leaves[(tree_key, si)] = (
+                    leaves, treedef, int(leaves[0].shape[0]))
+        self._results = {}
+        with self._cv:
+            self._pending = set(self._layout)
+        for s in reuse_horizon(self._order, depth=self.prefetch_depth):
+            tx = self._mom_tx.get(s)
+            if tx is not None:
+                tx.prefetch(0)
+
+    def on_grads(self, step: int, stage: int, leaves) -> None:
+        """Grad-tap endpoint — XLA host-callback thread. Enqueue only:
+        nothing here may touch jax or block."""
+        self._queue.put((step, stage, leaves))
+
+    def _worker_loop(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                return
+            step, stage, gleaves = item
+            try:
+                self._process(step, stage, gleaves)
+            except BaseException as e:  # surfaced by finish_step
+                with self._cv:
+                    if self._error is None:
+                        self._error = e
+            finally:
+                with self._cv:
+                    self._pending.discard(stage)
+                    self._cv.notify_all()
+
+    def _process(self, step: int, stage: int, gleaves) -> None:
+        info = self._layout.get(stage)
+        if info is None:
+            raise KeyError(f"grad tap for unknown stage {stage}")
+        key, si, li = info
+        p_leaves, _, _ = self._seg_leaves[(key, si)]
+        new_step = step + 1
+        n = len(gleaves)
+
+        old_payload: Optional[List[np.ndarray]] = None
+        if self._has_m:
+            tx = self._mom_tx[stage]
+            with obs.span("opt.fetch", cat="opt", step=step, stage=stage,
+                          key=tx.step_id) as sp:
+                old_payload = [np.asarray(a) for a in
+                               tx.peek(0, to_device=False)]
+                nbytes = int(sum(a.nbytes for a in old_payload))
+                sp.set(bytes=nbytes)
+            self.counters["opt_fetched_bytes"] += nbytes
+            # one stage ahead (§3.3.2 applied to moments): warm the next
+            # expected arrival while this stage's update computes
+            pos = self._pos[stage]
+            for nxt in reuse_horizon(self._order[pos + 1:],
+                                     depth=self.prefetch_depth):
+                ntx = self._mom_tx.get(nxt)
+                if ntx is not None:
+                    ntx.prefetch(0)
+
+        step_arr = jnp.asarray(new_step, jnp.int32)
+        new_p: List[Any] = []
+        new_m: List[Any] = []
+        new_v: List[Any] = []
+        with obs.span("engine.opt_update", cat="engine", step=step,
+                      stage=stage):
+            for j in range(n):
+                m_j = old_payload[j] if self._has_m else None
+                v_j = old_payload[n + j] if self._has_n else None
+                p_j, m_out, v_out = self._leaf_fn(
+                    p_leaves[j][li], m_j, v_j, gleaves[j], step_arr)
+                new_p.append(p_j)
+                if self._has_m:
+                    new_m.append(m_out)
+                if self._has_n:
+                    new_v.append(v_out)
+        self._results[stage] = new_p
+        self.counters["opt_updates"] += 1
+
+        if not self._has_m:
+            return
+        payload = [np.asarray(a, np.float32) for a in new_m + new_v]
+        unchanged = all(a.tobytes() == b.tobytes()
+                        for a, b in zip(payload, old_payload))
+        if unchanged:
+            # write-back policy: the lease we already hold is
+            # byte-identical — keep it instead of rewriting the SSD
+            nbytes = int(sum(a.nbytes for a in payload))
+            self.spool.stats.opt_skipped_bytes += nbytes
+            self.counters["opt_stage_skips"] += 1
+            self.counters["opt_skipped_bytes"] += nbytes
+            obs.instant("opt.stage_skip", cat="opt", step=step,
+                        stage=stage, bytes=nbytes)
+            return
+        with obs.span("opt.stage", cat="opt", step=step, stage=stage,
+                      key=f"opt{new_step}L{stage}") as sp:
+            ntx = self.spool.step(f"opt{new_step}L{stage}")
+            ntx.offload(0, payload)
+            nbytes = int(sum(a.nbytes for a in payload))
+            sp.set(bytes=nbytes)
+        self.counters["opt_staged_bytes"] += nbytes
+        old_tx, self._mom_tx[stage] = self._mom_tx[stage], ntx
+        old_tx.close()
+
+    def finish_step(self, params, grads):
+        """Join the side stream, update the non-scanned rest of the tree
+        with the same kernels, and reassemble the stacked params.
+        Returns ``(new_params, OptState(step+1, None, None))`` — the
+        moments stay on the spool / in the bridge."""
+        with obs.span("engine.opt_join", cat="engine", step=self._step):
+            if self.eager:
+                deadline = (threading.TIMEOUT_MAX if self.join_timeout
+                            is None else self.join_timeout)
+                with self._cv:
+                    ok = self._cv.wait_for(
+                        lambda: not self._pending or self._error,
+                        timeout=deadline)
+                    if not ok:
+                        missing = sorted(self._pending)
+                        raise RuntimeError(
+                            f"opt overlap join timed out after "
+                            f"{self.join_timeout:.0f}s; stages never "
+                            f"tapped: {missing}")
+            else:
+                while self._pending and self._error is None:
+                    try:
+                        step, stage, gleaves = self._queue.get_nowait()
+                    except queue.Empty:
+                        missing = sorted(self._pending)
+                        raise RuntimeError(
+                            f"grad taps missing for stages {missing} — "
+                            f"was the tapped program run?") from None
+                    try:
+                        self._process(step, stage, gleaves)
+                    except BaseException as e:
+                        self._error = e
+                    finally:
+                        self._pending.discard(stage)
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "eager optimizer update failed mid-backward") from err
+
+        new_step = self._step + 1
+        step_arr = jnp.asarray(new_step, jnp.int32)
+        rest_p, treedef = jax.tree.flatten(_rest(params))
+        rest_g = jax.tree.leaves(_rest(grads))
+        rest_m = (jax.tree.leaves(self._rest_m) if self._has_m
+                  else [None] * len(rest_p))
+        rest_n = (jax.tree.leaves(self._rest_n) if self._has_n
+                  else [None] * len(rest_p))
+        out_p, out_m, out_n = [], [], []
+        for p, m, v, g in zip(rest_p, rest_m, rest_n, rest_g):
+            np_, nm_, nv_ = self._leaf_fn(p, m, v, g, step_arr)
+            out_p.append(np_)
+            out_m.append(nm_)
+            out_n.append(nv_)
+        new_params = jax.tree.unflatten(treedef, out_p)
+        if self._has_m:
+            self._rest_m = jax.tree.unflatten(treedef, out_m)
+        if self._has_n:
+            self._rest_n = jax.tree.unflatten(treedef, out_n)
+
+        for tree_key, _ in _SCAN_KEYS:
+            if not params.get(tree_key):
+                continue
+            new_params[tree_key] = self._restack(tree_key)
+        self._step = new_step
+        return new_params, OptState(jnp.asarray(new_step, jnp.int32),
+                                    None, None)
+
+    def _restack(self, tree_key: str) -> list:
+        """Reassemble one stream's stacked per-segment params from the
+        per-stage update results."""
+        stage_of = {(k, si, li): s for s, (k, si, li)
+                    in self._layout.items()}
+        out = []
+        si = 0
+        while (tree_key, si) in self._seg_leaves:
+            leaves, treedef, n = self._seg_leaves[(tree_key, si)]
+            per_layer = [self._results[stage_of[(tree_key, si, li)]]
+                         for li in range(n)]
+            stacked = [jnp.stack([per_layer[li][j] for li in range(n)])
+                       for j in range(len(leaves))]
+            out.append(jax.tree.unflatten(treedef, stacked))
+            si += 1
+        return out
+
+    # ------------------------------------------------- materialization
+
+    def materialize(self) -> OptState:
+        """The full OptState (step, mu, nu), reassembled
+        non-consumingly from the spool leases and the in-memory rest
+        subtree — for checkpoints and run-end hand-back."""
+        step = jnp.asarray(self._step, jnp.int32)
+        if not self._has_m:
+            return OptState(step, None, None)
+        mu: dict = dict(self._rest_m)
+        nu: dict = dict(self._rest_n) if self._has_n else None
+        for tree_key, _ in _SCAN_KEYS:
+            segs_m, segs_n = [], []
+            si = 0
+            while (tree_key, si) in self._seg_meta:
+                treedef, n = self._seg_meta[(tree_key, si)]
+                stage_of = {l_i: s for s, (k, s_i, l_i)
+                            in self._layout.items()
+                            if k == tree_key and s_i == si}
+                payloads = []
+                for li in range(n):
+                    tx = self._mom_tx[stage_of[li]]
+                    payloads.append([np.asarray(a) for a in
+                                     tx.peek(0, to_device=False)])
+                nl = len(payloads[0]) // (2 if self._has_n else 1)
+                segs_m.append(jax.tree.unflatten(treedef, [
+                    jnp.stack([payloads[li][j] for li in range(n)])
+                    for j in range(nl)]))
+                if self._has_n:
+                    segs_n.append(jax.tree.unflatten(treedef, [
+                        jnp.stack([payloads[li][nl + j]
+                                   for li in range(n)])
+                        for j in range(nl)]))
+                si += 1
+            if segs_m:
+                mu[tree_key] = segs_m
+                if self._has_n:
+                    nu[tree_key] = segs_n
+        return OptState(step, mu, nu)
+
+    def moment_bytes(self) -> int:
+        """Total bytes of seeded per-stage moment payloads — the write
+        traffic one step's moment stage-back adds to the spool; feed
+        this to `AdaptivePolicy.price_opt_io` so the activation planner
+        budgets the shared write bandwidth. 0 before seeding and for
+        moment-free optimizers (plain SGD)."""
+        return self._moment_bytes
+
+    def stats(self) -> Dict[str, int]:
+        return dict(self.counters)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._worker is not None:
+            self._queue.put(None)
+            self._worker.join(timeout=10.0)
+            self._worker = None
+        for tx in self._mom_tx.values():
+            tx.close()
+        self._mom_tx = {}

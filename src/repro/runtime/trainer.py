@@ -97,6 +97,7 @@ class TrainLoop:
                  shardings: Any = None,
                  spool: Any = None,
                  host_offload: Any = False,
+                 opt_bridge: Any = None,
                  on_step: Optional[Callable[[int, float, Any, Any],
                                             None]] = None,
                  install_signal_handlers: bool = False):
@@ -116,6 +117,14 @@ class TrainLoop:
             host_offload = "opt_state" if host_offload else "none"
         assert host_offload in ("none", "opt_state", "activations"), \
             host_offload
+        # Eager overlap (repro.optim.overlap.OptBridge): the bridge owns
+        # per-layer opt-state placement, so the serial whole-state
+        # staging path is retired for this loop — the step_fn's grad
+        # taps drive all opt I/O and the loop's opt_state is a light
+        # (step, None, None) husk the bridge can rematerialize.
+        self.opt_bridge = opt_bridge
+        if opt_bridge is not None and host_offload == "opt_state":
+            host_offload = "none"
         self.spool = spool
         self.host_offload = (host_offload if spool is not None
                              else "none")
@@ -170,7 +179,12 @@ class TrainLoop:
 
     def _save(self, final: bool = False):
         opt_state = self.state.opt_state
-        if opt_state is None and self._opt_tx is not None:
+        if self.opt_bridge is not None and self.opt_bridge.seeded:
+            # per-layer moments live on the spool (plus the bridge's
+            # in-memory rest-of-tree moments) — reassemble the full
+            # OptState non-consumingly for the checkpoint
+            opt_state = self.opt_bridge.materialize()
+        elif opt_state is None and self._opt_tx is not None:
             # staged out between steps: materialize non-consumingly —
             # peek() must not cancel the queued store, or the next
             # step's fetch would find neither arrays nor blob
@@ -224,6 +238,9 @@ class TrainLoop:
         if self._opt_tx is not None:
             self.state = TrainState(self.state.step, self.state.params,
                                     self._acquire_opt_state())
+        if self.opt_bridge is not None and self.opt_bridge.seeded:
+            self.state = TrainState(self.state.step, self.state.params,
+                                    self.opt_bridge.materialize())
         self._save(final=True)
         return self.state
 

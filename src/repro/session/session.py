@@ -139,6 +139,7 @@ class TrainSession:
                  min_offload_elements: Optional[int] = None,
                  trace: Optional[str] = None,
                  trace_ring: int = 0,
+                 opt_overlap: Union[bool, str, None] = None,
                  install_signal_handlers: bool = False):
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
@@ -166,6 +167,17 @@ class TrainSession:
         self.cfg = (resolve_config(arch) if isinstance(arch, str)
                     else arch.validate())
         self.io = io.validate() if io is not None else None
+        # eager per-layer optimizer overlap (repro.optim.overlap):
+        # session kwarg wins, else the io config's knob. Truthy values:
+        # True (overlapped worker) or "sync" (same kernels/taps, updates
+        # applied in finish_step — the same-compile serial reference).
+        if opt_overlap is None:
+            opt_overlap = (self.io.opt_overlap
+                           if self.io is not None else False)
+        self.opt_overlap = opt_overlap
+        if opt_overlap and engine != "jit":
+            raise ValueError("opt_overlap is a jit-engine feature (the "
+                             "staged engine already updates per stage)")
         self.api = build_model(self.cfg)
         self.optimizer = _resolve_optimizer(optimizer, lr)
         self.seed = seed
@@ -213,6 +225,8 @@ class TrainSession:
         self.ckpt_dir = ckpt_dir
 
         self._hook_bridge = None
+        self._opt_bridge = None
+        self._optb_snapshot: dict = {}
         if engine == "staged":
             self.policy = resolve_policy(policy)
             self.settings = settings or RunSettings(
@@ -232,7 +246,9 @@ class TrainSession:
             self._ckpt = None       # TrainLoop owns its manager
             mode = self.io.host_offload if self.io is not None else "none"
             self.spool = None
-            if mode != "none":
+            if mode != "none" or self.opt_overlap:
+                # opt overlap needs a spool even when no host_offload
+                # mode is set — the per-layer moment leases live on it
                 self.spool, owned = build_spool(
                     self.io, spool_dir=spool_dir,
                     min_offload_elements=min_offload_elements)
@@ -274,9 +290,22 @@ class TrainSession:
                         == "recompute" if self.io is not None else True))
                 self.settings = dataclasses.replace(
                     self.settings, hook_bridge=self._hook_bridge)
-            self._step_fn = make_host_train_step(
-                self.api, self.optimizer, self.settings,
-                mesh=self.mesh, axes=self.mesh_axes)
+            if self.opt_overlap:
+                from repro.launch.steps import make_overlap_train_step
+                from repro.optim.overlap import OptBridge
+                self._opt_bridge = OptBridge(
+                    self.optimizer, self.spool,
+                    eager=(self.opt_overlap != "sync"))
+                self.settings = dataclasses.replace(
+                    self.settings, opt_sink=self._opt_bridge)
+                self._step_fn = make_overlap_train_step(
+                    self.api, self.optimizer, self.settings,
+                    self._opt_bridge, mesh=self.mesh,
+                    axes=self.mesh_axes)
+            else:
+                self._step_fn = make_host_train_step(
+                    self.api, self.optimizer, self.settings,
+                    mesh=self.mesh, axes=self.mesh_axes)
 
     # ------------------------------------------------------------ state
 
@@ -488,6 +517,11 @@ class TrainSession:
                     pass
             stats_d, shard_d, obs_d, cache_d, resil_d = \
                 self._step_deltas()
+            if self._opt_bridge is not None:
+                cur = self._opt_bridge.stats()
+                prev = self._optb_snapshot
+                extra.update({k: cur[k] - prev.get(k, 0) for k in cur})
+                self._optb_snapshot = cur
             rep = StepReport(
                 loss=extra.get("loss", float("nan")),
                 step_time=dt, step=step, engine="jit",
@@ -506,6 +540,7 @@ class TrainSession:
                 spool=self.spool,
                 host_offload=(self.io.host_offload
                               if self.io is not None else "none"),
+                opt_bridge=self._opt_bridge,
                 install_signal_handlers=self.install_signal_handlers)
         self._loop.on_step = on_step
         self._loop.state = self._state
@@ -527,6 +562,8 @@ class TrainSession:
             self._loop.close()
         if self._hook_bridge is not None:
             self._hook_bridge.close()      # drop aborted-step leases
+        if self._opt_bridge is not None:
+            self._opt_bridge.close()       # stop worker, drop moment leases
         if self.engine == "jit" and self.spool is not None:
             self.spool.close()
         if self._ckpt is not None:

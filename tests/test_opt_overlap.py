@@ -1,0 +1,277 @@
+"""Eager per-layer optimizer updates overlapped with backward.
+
+The contract under test (repro.optim.overlap + the session/CLI
+``opt_overlap`` knob): streaming the optimizer update under backward —
+per-layer moment leases on the spool, updates on a side worker — must
+change NOTHING about the training math. Losses, final params, and the
+full final optimizer state are bitwise-identical to the serial fused
+path, in every mode (eager worker / "sync" drain), for every optimizer
+with a per-leaf kernel (adamw, sgd, sgd+momentum), on a single device
+and on a forced-host-device mesh (subprocess, per the dry-run
+contract). The staged engine updates per stage already and must reject
+the knob rather than half-support it.
+
+Also covered: the resilience ladder (an armed opt-moment read failure
+mid-backward is absorbed by the spool's load retries and the run still
+matches the clean one bit-for-bit), the write-back skip policy (a
+fully label-masked batch has zero grads, so unchanged moments keep
+their lease instead of rewriting the backend), and the obs lane (opt
+I/O lands in opt_io_busy_s/opt_hidden_frac with engine.opt_update
+spans in the trace, not in the activation metrics).
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import SpoolIoConfig
+from repro.configs.paper_models import small_gpt
+from repro.optim.optimizers import adamw, sgd
+from repro.session import TrainSession
+
+CFG = dataclasses.replace(small_gpt(128, 2), dtype="float32")
+STEPS = 3
+N_STAGES = 2            # small_gpt(_, 2): two scanned decoder layers
+
+
+def _run(mode, *, optimizer=None, backend="mem", trace=None,
+         loader=None, arm_reads=0):
+    """One jit-engine session; mode is "serial" (fused update +
+    host_offload staging), "sync", or True (eager worker)."""
+    io = SpoolIoConfig(
+        backend=backend,
+        host_offload="opt_state" if mode == "serial" else "none")
+    sess = TrainSession(
+        CFG, engine="jit", io=io,
+        optimizer=(optimizer if optimizer is not None
+                   else adamw(1e-3, clip_norm=None)),
+        opt_overlap=None if mode == "serial" else mode,
+        lr=1e-3, batch_size=2, seq_len=32, seed=3, ckpt_every=0,
+        min_offload_elements=2 ** 8, trace=trace, loader=loader)
+    try:
+        if arm_reads:
+            from repro.io import FaultInjectingBackend
+            from repro.resilience import unwrap_chain
+            for b in unwrap_chain(sess.spool.backend):
+                if isinstance(b, FaultInjectingBackend):
+                    b.arm_read_failures(arm_reads, key_substr="opt")
+        res = sess.run(STEPS)
+        bridge = sess._opt_bridge
+        opt = (bridge.materialize()
+               if bridge is not None and bridge.seeded
+               else sess.state.opt_state)
+        moments = lambda t: (None if t is None else
+                             [np.asarray(x).tobytes()
+                              for x in jax.tree.leaves(t)])
+        return {
+            "losses": [float(l) for l in res.losses],
+            "params": [np.asarray(x).tobytes()
+                       for x in jax.tree.leaves(sess.state.params)],
+            "mu": moments(opt.mu),
+            "nu": moments(opt.nu),
+            "opt_step": int(opt.step),
+            "bridge": bridge.stats() if bridge is not None else None,
+            "load_retries": (sess.spool.stats.load_retries
+                             if sess.spool is not None else 0),
+            "opt_skipped_bytes": (sess.spool.stats.opt_skipped_bytes
+                                  if sess.spool is not None else 0),
+            "obs": [r.obs for r in res.reports],
+        }
+    finally:
+        sess.close()
+
+
+def _assert_bitwise(a, b):
+    assert a["losses"] == b["losses"], (a["losses"], b["losses"])
+    assert a["params"] == b["params"]
+    assert a["mu"] == b["mu"]
+    assert a["nu"] == b["nu"]
+    assert a["opt_step"] == b["opt_step"]
+
+
+@pytest.fixture(scope="module")
+def serial_run():
+    return _run("serial")
+
+
+@pytest.fixture(scope="module")
+def eager_run(tmp_path_factory):
+    trace = str(tmp_path_factory.mktemp("optov") / "trace.json")
+    out = _run(True, trace=trace)
+    out["trace"] = trace
+    return out
+
+
+# ------------------------------------------------------------- parity
+
+def test_eager_matches_serial_bitwise(serial_run, eager_run):
+    """The tentpole bar: per-step losses, final params, and the full
+    final optimizer state are bit-for-bit the serial path's."""
+    _assert_bitwise(serial_run, eager_run)
+    assert eager_run["bridge"]["opt_updates"] == STEPS * N_STAGES
+    assert eager_run["bridge"]["opt_fetched_bytes"] > 0
+    assert eager_run["bridge"]["opt_staged_bytes"] > 0
+
+
+def test_sync_mode_matches_serial_bitwise(serial_run):
+    """"sync" drains the same taps/kernels at the join barrier — the
+    serial schedule of the identical per-layer pipeline."""
+    _assert_bitwise(serial_run, _run("sync"))
+
+
+@pytest.mark.parametrize("make_opt", [
+    pytest.param(lambda: sgd(1e-3, momentum=0.9), id="sgd-momentum"),
+    pytest.param(lambda: sgd(1e-3), id="sgd-plain"),
+])
+def test_sgd_parity(make_opt):
+    """Momentum streams a single-moment payload; plain sgd has no
+    moment leases at all (the bridge only reorders the update)."""
+    serial = _run("serial", optimizer=make_opt())
+    eager = _run(True, optimizer=make_opt())
+    _assert_bitwise(serial, eager)
+    assert eager["bridge"]["opt_updates"] == STEPS * N_STAGES
+
+
+# ------------------------------------------------- resilience ladder
+
+def test_opt_fetch_failure_rides_retry_ladder(serial_run):
+    """An opt-moment read that fails mid-backward is retried by the
+    spool's load workers (retry_attempts=3 default); the run completes
+    and still matches the clean serial run bit-for-bit."""
+    faulted = _run(True, backend="fault:mem", arm_reads=2)
+    _assert_bitwise(serial_run, faulted)
+    assert faulted["load_retries"] >= 1, faulted["load_retries"]
+
+
+# ------------------------------------------------- write-back policy
+
+class _MaskedLoader:
+    """Every label masked (-1): the loss is 0 over 0 tokens, grads are
+    exactly zero, and adamw moments stay at their seeded zeros."""
+
+    def __init__(self, batch, seq):
+        self._batch = {
+            "tokens": np.ones((batch, seq), np.int32),
+            "labels": np.full((batch, seq), -1, np.int32)}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return dict(self._batch)
+
+    def state_dict(self):
+        return {}
+
+    def load_state_dict(self, state):
+        pass
+
+
+def test_unchanged_moments_skip_writeback():
+    out = _run(True, loader=_MaskedLoader(2, 32))
+    assert out["losses"] == [0.0] * STEPS
+    assert out["bridge"]["opt_stage_skips"] == STEPS * N_STAGES
+    assert out["bridge"]["opt_skipped_bytes"] > 0
+    assert out["opt_skipped_bytes"] == out["bridge"]["opt_skipped_bytes"]
+    # nothing was re-staged after seeding: every lease was kept
+    assert out["bridge"]["opt_staged_bytes"] == 0
+
+
+# ------------------------------------------------------ obs lane
+
+def test_obs_attributes_opt_lane(eager_run):
+    """Per-step rows carry the opt lane, and the trace has the worker
+    and update spans the analyzer classifies on."""
+    rows = [r for r in eager_run["obs"][1:] if r]   # skip compile step
+    assert rows and any(r["opt_io_busy_s"] > 0 for r in rows)
+    assert all(0.0 <= r["opt_hidden_frac"] <= 1.0 for r in rows)
+    names = {e["name"] for e in
+             json.load(open(eager_run["trace"]))["traceEvents"]
+             if e.get("ph") == "X"}
+    for want in ("engine.opt_update", "engine.opt_join", "opt.fetch",
+                 "opt.stage"):
+        assert want in names, (want, sorted(names))
+
+
+# ------------------------------------------------------------- gates
+
+def test_staged_engine_rejects_overlap():
+    with pytest.raises(ValueError, match="jit-engine"):
+        TrainSession(CFG, engine="staged", opt_overlap=True,
+                     io=SpoolIoConfig(backend="mem"))
+
+
+def test_clipped_optimizer_rejected():
+    with pytest.raises(ValueError, match="clip"):
+        TrainSession(CFG, engine="jit", opt_overlap=True,
+                     io=SpoolIoConfig(backend="mem"),
+                     optimizer=adamw(1e-3, clip_norm=1.0),
+                     batch_size=2, seq_len=32)
+
+
+# ------------------------------------------------------- mesh parity
+
+SCRIPT_MESH = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import numpy as np
+import jax
+
+from repro.configs.base import SpoolIoConfig
+from repro.configs.paper_models import small_gpt
+from repro.launch.mesh import make_test_mesh
+from repro.optim.optimizers import adamw
+from repro.session import TrainSession
+
+cfg = dataclasses.replace(small_gpt(128, 2), dtype="float32")
+
+def run(mode):
+    io = SpoolIoConfig(
+        backend="mem",
+        host_offload="opt_state" if mode == "serial" else "none")
+    sess = TrainSession(cfg, engine="jit", io=io,
+                        optimizer=adamw(1e-3, clip_norm=None),
+                        opt_overlap=None if mode == "serial" else mode,
+                        lr=1e-3, batch_size=8, seq_len=64, seed=3,
+                        ckpt_every=0, min_offload_elements=2 ** 10,
+                        mesh=make_test_mesh((2, 4), ("data", "model")))
+    res = sess.run(2)
+    bridge = sess._opt_bridge
+    opt = (bridge.materialize() if bridge is not None and bridge.seeded
+           else sess.state.opt_state)
+    out = ([float(l) for l in res.losses],
+           [np.asarray(x).tobytes()
+            for x in jax.tree.leaves(sess.state.params)],
+           [np.asarray(x).tobytes()
+            for x in jax.tree.leaves((opt.mu, opt.nu))])
+    sess.close()
+    return out
+
+serial = run("serial")
+eager = run(True)
+assert serial[0] == eager[0], ("losses", serial[0], eager[0])
+assert serial[1] == eager[1], "params diverged"
+assert serial[2] == eager[2], "moments diverged"
+print("ALL_OK_OPT_MESH")
+"""
+
+
+def test_mesh_parity_subprocess():
+    """DP x TP mesh (8 forced host devices in a subprocess, per the
+    dry-run contract): eager overlap stays bitwise-identical when the
+    grad taps fire per shard."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT_MESH],
+                       env=env, capture_output=True, text=True,
+                       timeout=1200)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL_OK_OPT_MESH" in r.stdout, (r.stdout, r.stderr[-2000:])
